@@ -1,0 +1,22 @@
+"""Shared benchmark utilities."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

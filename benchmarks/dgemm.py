@@ -1,0 +1,53 @@
+"""Fig. 11 analogue: DGEMM N x 128 @ 128 x N sweep.
+
+The paper measures flops/cycle on real silicon.  This container is CPU, so
+we report (a) measured CPU wall time of the facility GEMM (XLA path — the
+jit'd production lowering), and (b) the *v5e roofline-projected*
+utilization of the Pallas kernel's tiling: for each N, the kernel's
+arithmetic intensity AI = FLOPs / HBM-bytes(BlockConfig) gives
+projected_flops = min(peak, AI * HBM_bw); utilization = projected / peak —
+the same "% of peak vs problem size" curve as the paper's Figure 11
+(26 flops/cycle = 81% of peak on POWER10-MMA at N >= 512).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import tiling
+from repro.core.precision import Ger, policy
+from repro.kernels import ref
+from repro.roofline.analysis import V5E
+
+
+def _traffic_bytes(m, n, k, cfg, pol):
+    """HBM traffic of the accumulator-resident kernel: each X panel is read
+    once per N-tile column, each Y panel once per M-tile row; C written
+    once."""
+    gm, gn, gk = cfg.grid_of(m, n, k)
+    x_reads = gm * gn * gk * cfg.bm * cfg.bk * pol.in_bytes
+    y_reads = gm * gn * gk * cfg.bk * cfg.bn * pol.in_bytes
+    c_write = m * n * pol.acc_bytes
+    return x_reads + y_reads + c_write
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n in (128, 256, 512, 1024, 2048):
+        m, k = n, 128
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        f = jax.jit(lambda a, b: ref.ger(a, b, Ger.F32GER))
+        us = time_fn(f, x, y)
+        flops = 2 * m * n * k
+        # v5e projection for the bf16 kernel tiling at this shape
+        pol = policy(Ger.BF16GER2)
+        cfg = tiling.choose_blocks(m, n, k, Ger.BF16GER2)
+        traffic = _traffic_bytes(m, n, k, cfg, pol)
+        ai = flops / traffic
+        proj = min(V5E["peak_flops"], ai * V5E["hbm_bw"])
+        emit(f"dgemm_N{n}", us,
+             f"cpu_gflops={flops / us / 1e3:.1f};"
+             f"v5e_util={proj / V5E['peak_flops']:.3f};"
+             f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")

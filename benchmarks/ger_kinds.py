@@ -1,0 +1,38 @@
+"""Table I/II coverage: every rank-k update family through the Pallas
+kernel (interpret mode = CPU execution of the TPU kernel body), validated
+against the architected oracle, with per-call wall time (interpret-mode
+timing is a correctness artifact, not a perf number)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.precision import Ger, policy
+from repro.kernels import mma_gemm, ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    m, k, n = 64, 128, 128
+    for kind in [Ger.BF16GER2, Ger.F16GER2, Ger.F32GER, Ger.I8GER4,
+                 Ger.I16GER2, Ger.I4GER8]:
+        pol = policy(kind)
+        if pol.packed_int4:
+            x = jnp.asarray(rng.integers(-128, 128, (m, k // 2)), jnp.int8)
+            y = jnp.asarray(rng.integers(-128, 128, (k // 2, n)), jnp.int8)
+        elif jnp.issubdtype(pol.x_dtype, jnp.integer):
+            x = jnp.asarray(rng.integers(-100, 100, (m, k)), pol.x_dtype)
+            y = (jnp.asarray(rng.integers(0, 200, (k, n)), pol.y_dtype))
+        else:
+            x = jnp.asarray(rng.normal(size=(m, k)), pol.x_dtype)
+            y = jnp.asarray(rng.normal(size=(k, n)), pol.y_dtype)
+        fn = lambda a, b: mma_gemm.mma_gemm(a, b, kind=kind,
+                                            block=(32, 128, 128),
+                                            interpret=True)
+        us = time_fn(fn, x, y, warmup=1, iters=3)
+        got = np.asarray(fn(x, y))
+        want = np.asarray(ref.ger(x, y, kind))
+        ok = np.allclose(got.astype(np.float64), want.astype(np.float64),
+                         rtol=1e-4, atol=1e-4)
+        emit(f"ger_{kind.value}", us, f"matches_oracle={ok}")
+        assert ok, kind

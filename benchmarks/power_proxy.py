@@ -1,0 +1,35 @@
+"""Fig. 12 analogue (power).  Power on pre-silicon models is out of reach;
+the paper's *mechanism* for the 8-12% power delta at 2.5x performance is
+operand traffic: with MME-resident accumulators, 'only the X and Y inputs
+have to be brought from the register files ... no output is placed on the
+results buses' (section III).  We quantify exactly that: operand bytes
+moved per FLOP for (a) the accumulator-resident kernel and (b) a
+vector-style kernel that reads+writes the C tile every rank-k step (the
+512-bit-vector alternative of section III point 2).  Lower bytes/FLOP at
+equal FLOPs = the power story."""
+
+from benchmarks.common import emit
+from repro.core import tiling
+from repro.core.precision import Ger, policy
+
+
+def run():
+    for kind, name in [(Ger.F32GER, "f32"), (Ger.BF16GER2, "bf16"),
+                       (Ger.F64GER, "f64")]:
+        pol = policy(kind)
+        m = n = k = 4096
+        cfg = tiling.choose_blocks(m, n, k, kind)
+        gm, gn, gk = cfg.grid_of(m, n, k)
+        flops = 2 * m * n * k
+        panel = gm * gn * gk * (cfg.bm * cfg.bk + cfg.bk * cfg.bn) \
+            * pol.in_bytes
+        acc_once = m * n * pol.acc_bytes                      # resident
+        acc_every = gm * gn * gk * 2 * cfg.bm * cfg.bn * pol.acc_bytes
+        resident = panel + acc_once
+        vector_style = panel + acc_every
+        # paper comparison point: 4x4 fp32 outer product = 2x128b in vs
+        # 3x512b in + 1x512b out for a 512-bit vector unit
+        emit(f"power_proxy_{name}", 0.0,
+             f"resident_B_per_flop={resident / flops:.4f};"
+             f"vector_B_per_flop={vector_style / flops:.4f};"
+             f"traffic_reduction={vector_style / resident:.2f}x")

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only dgemm,sconv]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Paper mapping:
+    dgemm        -> Figure 11 (N x 128 @ 128 x N DGEMM sweep)
+    hpl_like     -> Figure 10 (HPL/Linpack: blocked LU, GEMM fraction)
+    sconv        -> Section V-B (implicit-im2col convolution)
+    power_proxy  -> Figure 12 (operand traffic per FLOP — the power story)
+    ger_kinds    -> Tables I/II (every rank-k update family vs oracle)
+    step_bench   -> framework-level train/decode step times
+"""
+
+import argparse
+import sys
+
+from benchmarks import dgemm, ger_kinds, hpl_like, power_proxy, sconv, \
+    step_bench
+
+ALL = {
+    "dgemm": dgemm.run,
+    "hpl_like": hpl_like.run,
+    "sconv": sconv.run,
+    "power_proxy": power_proxy.run,
+    "ger_kinds": ger_kinds.run,
+    "step_bench": step_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            ALL[n]()
+        except Exception as e:  # keep the harness going; report at end
+            failed.append((n, repr(e)))
+            print(f"{n},nan,ERROR={e!r}", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

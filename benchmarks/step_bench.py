@@ -1,0 +1,39 @@
+"""End-to-end step benchmark (reduced configs on CPU): train and decode
+step wall times per architecture — the framework-level sanity row, and the
+source for tokens/s numbers in EXPERIMENTS.md."""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCHS, get
+from repro.configs.base import reduced
+from repro.data import pipeline
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import steps as S
+
+
+def run(archs=("deepseek-7b", "mixtral-8x22b", "mamba2-130m",
+               "zamba2-1.2b")):
+    for arch in archs:
+        cfg = reduced(get(arch))
+        opt_cfg = adamw.AdamWConfig()
+        state = S.init_train_state(cfg, jax.random.key(0), opt_cfg)
+        step = jax.jit(S.make_train_step(cfg, opt_cfg))
+        b = pipeline.synthetic_batch(cfg, batch=4, seq=64, step=0)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        out = step(state, batch)        # compile + run once
+        us = time_fn(lambda s, bt: step(s, bt)[1]["loss"], state, batch,
+                     warmup=1, iters=3)
+        toks = 4 * 64
+        emit(f"train_step_{arch}", us, f"tok_per_s={toks / us * 1e6:.0f}")
+
+        params = state["params"]
+        cache = M.init_cache(cfg, batch=4, seq_len=64)
+        dstep = jax.jit(lambda p, c, t: M.decode_step(p, c, t, cfg))
+        tok = jnp.zeros((4, 1), jnp.int32)
+        dstep(params, cache, tok)
+        us = time_fn(lambda p, c, t: dstep(p, c, t)[0], params, cache, tok,
+                     warmup=1, iters=3)
+        emit(f"decode_step_{arch}", us, f"tok_per_s={4 / us * 1e6:.0f}")

@@ -1,0 +1,33 @@
+"""Pipeline parallelism example: a 4-stage GPipe schedule on 4 virtual
+devices (run this file directly — it sets the device-count flag itself).
+
+    python examples/pipeline_parallel.py
+"""
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.runtime import pipeline as PP
+
+mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(4), ("stage",))
+params, stage_fn, ref_apply = PP.make_pipelined_mlp(
+    jax.random.key(0), n_stages=4, d=64, d_ff=256)
+
+x = jax.random.normal(jax.random.key(1), (32, 64))
+for mb in (4, 8, 16):
+    out = PP.pipeline_apply(stage_fn, params, x, mesh=mesh,
+                            microbatches=mb)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref_apply(params, x)),
+                               rtol=2e-5, atol=2e-5)
+    bubble = (4 - 1) / (mb + 4 - 1)
+    print(f"microbatches={mb:2d}: OK  (GPipe bubble fraction "
+          f"{bubble:.2f})")
+print("pipeline parallel example OK")

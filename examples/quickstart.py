@@ -1,0 +1,65 @@
+"""Quickstart: the MMA facility public API in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers: ger-kind policies, the accumulator-resident Pallas GEMM (interpret
+mode on CPU), prefixed masked forms, the SCONV kernel, and building a tiny
+model step through the facility.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import facility
+from repro.core.precision import Ger
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# --- 1. A rank-k update through the facility (paper eq. 1/2) -----------
+x = jnp.asarray(rng.normal(size=(256, 512)), jnp.bfloat16)
+y = jnp.asarray(rng.normal(size=(512, 384)), jnp.bfloat16)
+acc = ops.mma_dot(x, y, kind=Ger.BF16GER2)          # bf16 in, fp32 acc
+print("1. xvbf16ger2:", acc.shape, acc.dtype)
+
+# --- 2. Accumulate forms: A <- -XY + A  (the 'np' suffix) --------------
+c = jnp.asarray(rng.normal(size=(256, 384)), jnp.float32)
+from repro.kernels.mma_gemm import mma_gemm
+out = mma_gemm(x, y, c, kind=Ger.BF16GER2, neg_product=True,
+               interpret=True)
+np.testing.assert_allclose(
+    np.asarray(out), np.asarray(ref.ger(x, y, Ger.BF16GER2, acc=c,
+                                        neg_product=True)),
+    rtol=1e-5, atol=1e-5)
+print("2. xvbf16ger2np accumulate form: OK")
+
+# --- 3. Prefixed masked form (paper eq. 3): residual tiles -------------
+xm = jnp.arange(256) < 200          # only 200 valid rows
+ym = jnp.arange(384) < 300          # only 300 valid cols
+masked = ops.mma_pm_dot(x, y, kind=Ger.BF16GER2, xmask=xm, ymask=ym)
+assert float(jnp.abs(masked[200:]).max()) == 0.0
+print("3. pmxvbf16ger2 masked residual tile: OK")
+
+# --- 4. int8 x uint8 with int32 accumulation (xvi8ger4) ----------------
+xi = jnp.asarray(rng.integers(-128, 128, (64, 256)), jnp.int8)
+yi = jnp.asarray(rng.integers(0, 256, (256, 64)), jnp.uint8)
+qout = ops.mma_dot(xi, yi, kind=Ger.I8GER4)
+print("4. xvi8ger4:", qout.dtype, "max", int(qout.max()))
+
+# --- 5. SCONV: convolution without materializing patches ---------------
+img = jnp.asarray(rng.normal(size=(1, 32, 32, 3)), jnp.float32)
+ker = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
+conv = ops.mma_conv2d(img, ker)
+np.testing.assert_allclose(np.asarray(conv), np.asarray(
+    ref.conv2d(img, ker)), rtol=1e-4, atol=1e-4)
+print("5. SCONV implicit im2col:", conv.shape)
+
+# --- 6. A model layer through the facility ------------------------------
+with facility.configure(facility.FacilityConfig(ger=Ger.BF16GER2,
+                                                out_dtype=jnp.bfloat16)):
+    h = jnp.asarray(rng.normal(size=(2, 16, 128)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    out = facility.fdot(h, w)       # policy casting + fp32 accumulation
+print("6. facility.fdot in a model context:", out.shape, out.dtype)
+print("\nquickstart OK")

@@ -1,0 +1,38 @@
+"""Batched serving example: continuous batching over a request queue.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch glm4-9b
+
+Serves a reduced-config model: prefill-free slot admission, ring-buffer KV
+caches (bounded for SWA archs), argmax decoding.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get
+from repro.configs.base import reduced
+from repro.launch.serve import serve_loop
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(get(args.arch))
+    params = M.init_params(cfg, jax.random.key(0))
+    out = serve_loop(cfg, params, batch=args.batch, prompt_len=16,
+                     gen_len=args.gen, n_requests=args.requests)
+    print(f"{args.arch}: served {out['completed']} requests in "
+          f"{out['steps']} decode steps "
+          f"({out['tokens_per_s']:.0f} slot-tokens/s)")
+    assert out["completed"] == args.requests
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Compare baseline vs hillclimb variants for a cell.
+
+    PYTHONPATH=src python experiments/compare_variants.py deepseek-7b train_4k
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    d = os.path.join(os.path.dirname(__file__), "dryrun")
+    rows = []
+    for f in sorted(glob.glob(os.path.join(
+            d, f"{arch}__{shape}__16x16*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or r.get("rolled"):
+            continue
+        tag = r.get("variant") or "baseline"
+        rf = r["roofline"]
+        c = r["collectives"]["bytes_by_kind"]
+        rows.append((tag, rf))
+        print(f"{tag:16s} comp={rf['t_compute_s']:.3f}s "
+              f"mem={rf['t_memory_s']:.3f}s coll={rf['t_collective_s']:.3f}s"
+              f" bn={rf['bottleneck']:10s} useful={rf['useful_flops_ratio']:.2f}"
+              f" frac={rf['roofline_fraction']:.4f}"
+              f"  [ag={c['all-gather'] / 1e9:.1f} ar={c['all-reduce'] / 1e9:.1f}"
+              f" rs={c['reduce-scatter'] / 1e9:.1f} a2a={c['all-to-all'] / 1e9:.1f}"
+              f" cp={c['collective-permute'] / 1e9:.1f} GB]")
+    if len(rows) > 1:
+        base = next((r for t, r in rows if t == "baseline"), rows[0][1])
+        for tag, rf in rows:
+            if rf is base:
+                continue
+            d0 = base["step_time_lower_bound"] if "step_time_lower_bound" \
+                in base else max(base["t_compute_s"], base["t_memory_s"],
+                                 base["t_collective_s"])
+            d1 = max(rf["t_compute_s"], rf["t_memory_s"],
+                     rf["t_collective_s"])
+            print(f"  {tag}: step-bound {d0:.3f}s -> {d1:.3f}s "
+                  f"({(d0 - d1) / d0 * 100:+.1f}% better)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Recompute the 'roofline' block of existing dry-run records from their
+stored cost/collective data (accounting fixes don't require recompiles).
+
+    PYTHONPATH=src python experiments/recompute_roofline.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get
+from repro.launch.specs import SHAPES
+from repro.roofline import analysis as RA
+
+
+def main():
+    d = os.path.join(os.path.dirname(__file__), "dryrun")
+    n = 0
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        terms = RA.RooflineTerms(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=chips,
+            flops_per_chip=r.get("cost_analysis", {}).get("flops", 0.0),
+            bytes_per_chip=r.get("cost_analysis", {}).get(
+                "bytes accessed", 0.0),
+            collective_bytes_per_chip=float(
+                r.get("collectives", {}).get("total_bytes", 0)),
+            model_flops=RA.model_flops_for(get(r["arch"]),
+                                           SHAPES[r["shape"]]))
+        r["roofline"] = terms.to_json()
+        json.dump(r, open(f, "w"), indent=1)
+        n += 1
+    print(f"recomputed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""qwen2-vl-7b — VLM backbone, M-RoPE, dynamic-resolution vision frontend
+stubbed (precomputed patch embeddings) [arXiv:2409.12191; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064,
+    mrope=True, mrope_sections=(16, 24, 24),   # t/h/w over head_dim/2 = 64
+    vision_prefix=1024, frontend_stub=True,
+    gated_mlp=True, act="silu", norm="rmsnorm",
+    source="arXiv:2409.12191; hf",
+)

@@ -1,0 +1,123 @@
+"""The MMA facility as a composable JAX module (the paper's contribution).
+
+Every matrix contraction in the framework — attention projections, FFN and
+MoE expert GEMMs, Mamba2 SSD chunk products, logits — routes through this
+module instead of calling ``jnp.dot`` directly.  That is the system-level
+reading of the paper's programming model: a small set of *built-ins* with
+architected semantics (ger kind = input dtypes + accumulator dtype +
+accumulate form), beneath which the compiler owns scheduling and register
+(here: sharding and layout) allocation.
+
+Two lowerings share the same semantics (tested equivalent in
+tests/test_facility.py):
+
+  * ``lax.dot_general`` with ``preferred_element_type`` — the pjit/SPMD
+    path used by full models, which XLA lowers to MXU rank-k-update loops
+    with resident accumulators on TPU;
+  * the explicit Pallas kernels in ``repro.kernels`` — the hand-tiled path
+    (the paper's hand-written OpenBLAS kernels), used on hot spots and for
+    the benchmark/validation suites.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import precision
+
+Ger = precision.Ger
+
+
+@dataclasses.dataclass(frozen=True)
+class FacilityConfig:
+    """Numeric policy for a model's matrix math."""
+
+    ger: Ger = Ger.BF16GER2          # activation-side GEMM family
+    out_dtype: jnp.dtype = jnp.bfloat16   # activation dtype between ops
+    # Use hand-tiled Pallas kernels for 2-D dots (TPU hot path).  Off by
+    # default because the SPMD model path wants a shardable dot_general.
+    use_pallas: bool = False
+    interpret: bool = True           # Pallas interpret mode (CPU container)
+
+
+_CONFIG = contextvars.ContextVar("mma_facility", default=FacilityConfig())
+
+
+def current() -> FacilityConfig:
+    return _CONFIG.get()
+
+
+@contextlib.contextmanager
+def configure(cfg: FacilityConfig):
+    token = _CONFIG.set(cfg)
+    try:
+        yield cfg
+    finally:
+        _CONFIG.reset(token)
+
+
+def _cast_in(x, pol: precision.GerPolicy, side: str):
+    want = pol.x_dtype if side == "x" else pol.y_dtype
+    if pol.packed_int4:
+        return x  # already packed by the caller
+    return x.astype(want) if x.dtype != jnp.dtype(want) else x
+
+
+def fdot(x: jnp.ndarray, w: jnp.ndarray, *, ger: Ger | None = None,
+         out_dtype=None) -> jnp.ndarray:
+    """Contract the last axis of ``x`` with the first axis of ``w``.
+
+    This is the workhorse built-in: ``(..., K) x (K, N) -> (..., N)`` with
+    ger-policy input casting and high-precision resident accumulation.
+    """
+    cfg = current()
+    ger = ger or cfg.ger
+    out_dtype = out_dtype or cfg.out_dtype
+    pol = precision.policy(ger)
+
+    if cfg.use_pallas and x.ndim >= 2 and w.ndim == 2:
+        from repro.kernels import ops  # local import: avoids cycle
+        lead = x.shape[:-1]
+        out = ops.mma_dot(x.reshape(-1, x.shape[-1]), w, kind=ger,
+                          interpret=cfg.interpret, out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[-1])
+
+    if ger == Ger.F32GER_3XBF16:
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        out = ops.mma_dot(x.reshape(-1, x.shape[-1]), w,
+                          kind=ger, use_pallas=False, out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[-1])
+
+    x = _cast_in(x, pol, "x")
+    w = _cast_in(w, pol, "y")
+    out = lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pol.acc_dtype)
+    return out.astype(out_dtype)
+
+
+def feinsum(spec: str, a: jnp.ndarray, b: jnp.ndarray, *,
+            ger: Ger | None = None, out_dtype=None) -> jnp.ndarray:
+    """Facility-routed einsum for contractions that are not plain fdot
+    (attention scores/values, batched expert GEMMs, SSD chunk products)."""
+    cfg = current()
+    ger = ger or cfg.ger
+    out_dtype = out_dtype or cfg.out_dtype
+    pol = precision.policy(ger)
+    a = _cast_in(a, pol, "x")
+    b = _cast_in(b, pol, "y")
+    out = jnp.einsum(spec, a, b, preferred_element_type=pol.acc_dtype)
+    return out.astype(out_dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def flops_per_dot(m: int, n: int, k: int) -> int:
+    """Model-FLOPs bookkeeping used by the roofline layer."""
+    return 2 * m * n * k

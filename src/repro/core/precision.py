@@ -1,0 +1,101 @@
+"""GerKind: the MMA facility's rank-k update families, adapted to TPU.
+
+Power ISA MMA defines one rank-k outer-product-accumulate instruction family
+per input precision (Table I of the paper).  Each family fixes (a) the input
+element type of the X and Y panels, (b) the accumulator element type, and
+(c) the rank k of a single update (how many partial products one instruction
+folds into the accumulator).
+
+On TPU the "instruction" becomes one MXU pass over a (bm, bk) x (bk, bn)
+panel pair held in VMEM; the rank of the hardware update is the panel depth
+``bk``.  The *family* still matters: it selects input dtype, accumulator
+dtype, and any pre-processing (int4 unpacking, fp32 bf16x3 splitting).
+
+Faithful kinds map 1:1 to paper instructions; ADAPTED kinds document where
+the TPU forced a different lowering (see DESIGN.md section 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+
+
+class Ger(enum.Enum):
+    """MMA rank-k update instruction families (paper Table I)."""
+
+    # Floating point families.
+    F64GER = "xvf64ger"        # fp64 in, fp64 4x2 acc, rank-1
+    F32GER = "xvf32ger"        # fp32 in, fp32 4x4 acc, rank-1
+    BF16GER2 = "xvbf16ger2"    # bf16 in, fp32 acc, rank-2
+    F16GER2 = "xvf16ger2"      # fp16 in, fp32 acc, rank-2
+    # Integer families.
+    I16GER2 = "xvi16ger2"      # int16 in, int32 acc, rank-2
+    I8GER4 = "xvi8ger4"        # int8 x uint8 in, int32 acc, rank-4
+    I4GER8 = "xvi4ger8"        # int4 in, int32 acc, rank-8
+    # Beyond-paper, TPU-native kind: fp32 operands emulated by three bf16
+    # products (hi*hi + hi*lo + lo*hi) to run on the MXU instead of the VPU.
+    F32GER_3XBF16 = "f32ger.3xbf16"
+
+
+@dataclasses.dataclass(frozen=True)
+class GerPolicy:
+    """Resolved numeric policy for one Ger family."""
+
+    ger: Ger
+    x_dtype: jnp.dtype
+    y_dtype: jnp.dtype
+    acc_dtype: jnp.dtype
+    # Rank of the architected instruction (bookkeeping / oracle tests; the
+    # TPU panel depth is chosen by the tiler, in multiples of this).
+    arch_rank: int
+    # True when the TPU lowering differs from a literal port (DESIGN.md §2).
+    adapted: bool = False
+    # int4 inputs arrive packed two-per-int8 along K.
+    packed_int4: bool = False
+
+    @property
+    def in_bytes(self) -> int:
+        return jnp.dtype(self.x_dtype).itemsize
+
+    @property
+    def acc_bytes(self) -> int:
+        return jnp.dtype(self.acc_dtype).itemsize
+
+
+_POLICIES = {
+    Ger.F64GER: GerPolicy(Ger.F64GER, jnp.float64, jnp.float64, jnp.float64,
+                          arch_rank=1, adapted=True),  # VPU on TPU, no MXU fp64
+    Ger.F32GER: GerPolicy(Ger.F32GER, jnp.float32, jnp.float32, jnp.float32,
+                          arch_rank=1),
+    Ger.BF16GER2: GerPolicy(Ger.BF16GER2, jnp.bfloat16, jnp.bfloat16,
+                            jnp.float32, arch_rank=2),
+    Ger.F16GER2: GerPolicy(Ger.F16GER2, jnp.float16, jnp.float16, jnp.float32,
+                           arch_rank=2),
+    Ger.I16GER2: GerPolicy(Ger.I16GER2, jnp.int16, jnp.int16, jnp.int32,
+                           arch_rank=2, adapted=True),  # int8-pair lowering
+    Ger.I8GER4: GerPolicy(Ger.I8GER4, jnp.int8, jnp.uint8, jnp.int32,
+                          arch_rank=4),
+    Ger.I4GER8: GerPolicy(Ger.I4GER8, jnp.int8, jnp.int8, jnp.int32,
+                          arch_rank=8, packed_int4=True),
+    Ger.F32GER_3XBF16: GerPolicy(Ger.F32GER_3XBF16, jnp.float32, jnp.float32,
+                                 jnp.float32, arch_rank=1, adapted=True),
+}
+
+
+def policy(ger: Ger) -> GerPolicy:
+    return _POLICIES[ger]
+
+
+def default_ger_for(dtype) -> Ger:
+    """Pick the facility family a given activation dtype routes through."""
+    dtype = jnp.dtype(dtype)
+    return {
+        jnp.dtype(jnp.bfloat16): Ger.BF16GER2,
+        jnp.dtype(jnp.float16): Ger.F16GER2,
+        jnp.dtype(jnp.float32): Ger.F32GER,
+        jnp.dtype(jnp.float64): Ger.F64GER,
+        jnp.dtype(jnp.int8): Ger.I8GER4,
+    }[dtype]

@@ -1,0 +1,69 @@
+"""int8 weight quantization for serving — the xvi8ger4 exploitation path.
+
+The paper's DL story (section I) is mixed-precision inference: int8 inputs
+with int32 accumulation.  Here: symmetric per-output-channel weight
+quantization; activations quantized per-row at runtime; the int32 ger
+result is rescaled to bf16/fp32.  Matches the signed x unsigned asymmetry
+of xvi8ger4 by biasing activations into uint8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Ger
+from repro.kernels import ref
+
+
+def quantize_weight(w: jnp.ndarray):
+    """fp -> (int8 weight, per-column fp32 scale).  w: (K, N)."""
+    amax = jnp.abs(w).max(axis=0, keepdims=True)          # (1, N)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_act_u8(x: jnp.ndarray):
+    """fp -> (uint8 activation, per-row scale, per-row zero point).
+
+    x: (M, K); uint8 with zero-point (the paper's unsigned Y operand)."""
+    xmin = x.min(axis=1, keepdims=True)
+    xmax = x.max(axis=1, keepdims=True)
+    scale = jnp.where(xmax > xmin, (xmax - xmin) / 255.0, 1.0)
+    zp = jnp.round(-xmin / scale)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0, 255).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32), zp.astype(jnp.float32)
+
+
+def qdot(x: jnp.ndarray, wq: jnp.ndarray, wscale: jnp.ndarray,
+         out_dtype=jnp.float32):
+    """Quantized matmul: fp activations x int8 weights -> fp.
+
+    x: (M, K) fp; wq: (K, N) int8.  Activations are quantized per-row to
+    uint8 (zero-point form), the int32 ger runs on the xvi8ger4 path, and
+    the zero-point correction uses the weight column sums.
+    """
+    xq, xs, xzp = quantize_act_u8(x.astype(jnp.float32))
+    # int32 accumulation: note operand order (int8 weightsᵀ x uint8 acts)
+    acc = ref.ger(wq.T, xq.T, Ger.I8GER4).T.astype(jnp.float32)  # (M, N)
+    wsum = wq.astype(jnp.int32).sum(axis=0).astype(jnp.float32)  # (N,)
+    # x ≈ (q - zp) * xs  ->  x @ w = xs * (q @ w) - xs * zp * colsum(w)
+    out = xs * acc - (xs * xzp) * wsum[None, :]
+    return (out * wscale).astype(out_dtype)
+
+
+def quantize_params_for_serving(params, min_size: int = 1 << 16):
+    """Quantize every large >=2-D fp32 weight; returns (qparams tree with
+    {'q','scale'} leaves replacing quantized ones, bytes_saved)."""
+    saved = [0]
+
+    def visit(p):
+        if (isinstance(p, jnp.ndarray) and p.ndim == 2
+                and p.dtype == jnp.float32 and p.size >= min_size):
+            q, s = quantize_weight(p)
+            saved[0] += p.size * 3  # 4B -> 1B
+            return {"q": q, "scale": s}
+        return p
+    qp = jax.tree.map(visit, params)
+    return qp, saved[0]

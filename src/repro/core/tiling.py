@@ -1,0 +1,98 @@
+"""Virtual-accumulator tiling: the paper's 8x8-from-8-ACCs trick, VMEM-scale.
+
+The DGEMM case study (paper section V-A) builds a *virtual* 8x8 fp64
+accumulator out of all eight architected 4x2 accumulators, so that each
+streamed (X, Y) panel pair amortizes over the largest output tile the
+register budget allows.  On TPU the same trade-off exists one level up the
+memory hierarchy: the accumulator tile lives in VMEM scratch, panels are
+double-buffered through VMEM, and the budget is ~16 MiB/core instead of
+8x512 bits.
+
+``choose_blocks`` is the analogue of the paper's accumulator allocation
+rules: maximize bm*bn (output tile reuse per streamed panel byte) subject to
+
+    acc_bytes * bm * bn  +  2 * bk * (bm + bn) * in_bytes  <=  vmem_budget
+
+with every dimension MXU-aligned (multiples of 128 lanes / 8 sublanes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import precision
+
+# Leave headroom for Pallas bookkeeping + the output copy.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET = int(VMEM_BYTES * 0.75)
+MXU = 128  # systolic array edge: alignment target for bm/bn/bk
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _round_down_pow2_mult(x: int, m: int) -> int:
+    """Largest multiple of m that is <= x (at least m)."""
+    return max(m, (x // m) * m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def grid_of(self):
+        def grid(m: int, n: int, k: int):
+            return (-(-m // self.bm), -(-n // self.bn), -(-k // self.bk))
+        return grid
+
+    def vmem_bytes(self, pol: precision.GerPolicy) -> int:
+        acc = pol.acc_bytes * self.bm * self.bn
+        panels = 2 * self.bk * (self.bm + self.bn) * pol.in_bytes
+        return acc + panels
+
+
+def choose_blocks(m: int, n: int, k: int, ger: precision.Ger,
+                  vmem_budget: int = VMEM_BUDGET) -> BlockConfig:
+    """Pick (bm, bn, bk) for an accumulator-resident GEMM.
+
+    Heuristic mirrors the paper's kernel: a square-ish output tile as large
+    as the accumulator budget allows, with a deep-enough k panel that the
+    MXU pipeline stays busy (bk >= 2*MXU when K allows).
+    """
+    pol = precision.policy(ger)
+    # Clamp to the (aligned) problem size so tiny problems get tiny tiles.
+    m_a = _round_up(max(m, 8), 8)
+    n_a = _round_up(max(n, MXU), MXU)
+    k_a = _round_up(max(k, MXU), MXU)
+
+    # Start from the preferred production tile and shrink until it fits both
+    # the problem and the VMEM budget.
+    for bm in (512, 256, 128, 64, 32, 16, 8):
+        if bm > m_a and bm > 8:
+            continue
+        for bn in (512, 256, 128):
+            if bn > n_a and bn > MXU:
+                continue
+            for bk in (1024, 512, 256, 128):
+                if bk > k_a and bk > MXU:
+                    continue
+                cfg = BlockConfig(min(bm, _round_up(m_a, 8)),
+                                  min(bn, n_a), min(bk, k_a))
+                if cfg.vmem_bytes(pol) <= vmem_budget:
+                    return cfg
+    return BlockConfig(8, MXU, MXU)
+
+
+def assert_fits_vmem(cfg: BlockConfig, ger: precision.Ger) -> None:
+    """The TPU analogue of 'do not spill accumulators' (paper section IV)."""
+    pol = precision.policy(ger)
+    used = cfg.vmem_bytes(pol)
+    if used > VMEM_BYTES:
+        raise ValueError(
+            f"accumulator tile {cfg} needs {used} B VMEM > {VMEM_BYTES} B; "
+            "this is the TPU equivalent of spilling MMA accumulators — "
+            "choose a smaller virtual accumulator")

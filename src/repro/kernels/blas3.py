@@ -1,0 +1,78 @@
+"""Other computations built from rank-k updates (paper section III claim:
+"the instructions ... can be used as building blocks of other
+computations, such as convolution, triangular solve and discrete Fourier
+transform").  Convolution is kernels/mma_conv.py; this module adds the
+other two, each composed from the facility's accumulate-form gers.
+
+* ``trsm``: blocked lower-triangular solve.  The panel update
+  ``B_i <- B_i - L_ij @ X_j`` is exactly the *np* accumulate form
+  ``A <- -XY + A`` (paper eq. 2), chained across block columns.
+* ``complex_gemm`` / ``dft``: complex matmul as four real rank-k updates
+  using the pp/np forms (re <- re@re [-] im@im, im <- re@im [+] im@re);
+  the DFT applies the twiddle matrix through it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Ger
+from repro.kernels import ref
+
+
+def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
+         unit_diagonal: bool = False) -> jnp.ndarray:
+    """Solve L X = B for X; L (N, N) lower-triangular, B (N, M).
+
+    Blocked forward substitution: the trailing updates are MMA 'np'
+    accumulate-form gers; only the (block x block) diagonal solves are
+    scalar-substitution code.
+    """
+    n, m = b.shape
+    nb = -(-n // block)
+    x = jnp.zeros_like(b)
+    for i in range(nb):
+        lo, hi = i * block, min((i + 1) * block, n)
+        rhs = b[lo:hi]
+        if i > 0:
+            # rhs <- rhs - L[i, :i] @ X[:i]   (xvf32gernp chaining)
+            rhs = ref.ger(l[lo:hi, :lo], x[:lo], Ger.F32GER,
+                          acc=rhs, neg_product=True)
+        xi = jax.scipy.linalg.solve_triangular(
+            l[lo:hi, lo:hi], rhs, lower=True,
+            unit_diagonal=unit_diagonal)
+        x = x.at[lo:hi].set(xi.astype(x.dtype))
+    return x
+
+
+def complex_gemm(ar, ai, br, bi, kind: Ger = Ger.F32GER):
+    """(ar + i·ai) @ (br + i·bi) via four real accumulate-form gers."""
+    re = ref.ger(ar, br, kind)
+    re = ref.ger(ai, bi, kind, acc=re, neg_product=True)     # np form
+    im = ref.ger(ar, bi, kind)
+    im = ref.ger(ai, br, kind, acc=im)                       # pp form
+    return re, im
+
+
+@functools.lru_cache(maxsize=8)
+def _twiddle(n: int):
+    k = jnp.arange(n)
+    ang = -2.0 * jnp.pi * k[:, None] * k[None, :] / n
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def dft(x_re: jnp.ndarray, x_im: jnp.ndarray | None = None):
+    """Dense DFT along axis 0 of (N, M) signals via complex_gemm.
+
+    (O(N^2) matrix form — the MMA exploitation the paper refers to is
+    precisely the matrix-multiply formulation of small/batched DFTs.)
+    """
+    n = x_re.shape[0]
+    wr, wi = _twiddle(n)
+    if x_im is None:
+        x_im = jnp.zeros_like(x_re)
+    return complex_gemm(wr.astype(x_re.dtype), wi.astype(x_re.dtype),
+                        x_re, x_im)

@@ -1,0 +1,120 @@
+"""Flash attention as accumulator-resident rank-k updates (beyond-paper).
+
+The paper closes with "the instructions can be used as building blocks of
+other computations".  Attention is the dominant such computation in the
+assigned model zoo, and its inner loop IS the MMA pattern twice over:
+
+    S_blk = Q_blk K_blkᵀ      — rank-d update into a (bq, bk) score tile
+    O_blk += P_blk V_blk      — rank-bk update into a (bq, D) output tile
+
+with the online-softmax running max/sum playing the role of the
+accumulator rescale (an `xvf32gerpp` with a per-row scale).  The O tile,
+running max m and normalizer l stay resident in VMEM scratch across the
+whole KV loop; only Q/K/V panels stream from HBM — exactly the POWER10
+MME execution model lifted to a fused two-GEMM kernel.
+
+Used as the TPU hot path for prefill; the SPMD model path keeps the
+jnp chunked attention (layers.sdpa) which XLA can shard.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+                  k_steps: int, bq: int, bk: int, causal: bool,
+                  sm_scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _prime():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                     # (bq, d)
+    k = k_ref[0]                                     # (bk, d)
+    v = v_ref[0]                                     # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                                 # (bq, bk)
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                   # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows
+        out_ref[0] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q, k, v: (BH, S, D) -> (BH, S, D).  S must divide by the blocks."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    if sq % bq or sk % bk:
+        raise ValueError(f"S ({sq},{sk}) must divide blocks ({bq},{bk})")
+    sm_scale = d ** -0.5
+    grid = (bh, sq // bq, sk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, k_steps=grid[2], bq=bq, bk=bk, causal=causal,
+        sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def ref_attention(q, k, v, *, causal: bool = True):
+    """Pure-jnp oracle."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

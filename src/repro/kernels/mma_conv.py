@@ -1,0 +1,83 @@
+"""SCONV — implicit-im2col convolution via rank-k accumulator updates.
+
+The paper's second case study (section V-B): a KH x KW multi-channel
+convolution computed *directly on the image*, never materializing the
+Abar patch matrix (paper eq. 8).  Each image row is loaded once into VMEM
+and then used KW times at shifted displacements — "each of its rows is
+loaded three times, each time starting at a different displacement" — while
+the filter bank Hbar plays the role of the left GEMM operand.
+
+Pallas mapping:
+  grid = (N*OH, F/bf, KH); the KH axis is the rank-accumulation loop, so the
+  (OW, bf) output tile is a resident VMEM accumulator across it, exactly
+  like the GEMM kernel's k-loop.  Inside one step, the KW shifts become KW
+  MXU dots of (OW, C) x (C, bf) — the paper's 27 ger updates for the
+  3x3x3-channel case.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sconv_kernel(x_ref, w_ref, out_ref, acc_ref, *, kh_total: int,
+                  kw_total: int, ow: int, acc_dtype):
+    kh = pl.program_id(2)
+
+    @pl.when(kh == 0)
+    def _prime():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row = x_ref[0, 0]                       # (W, C) image row oh + kh
+    for kw in range(kw_total):              # shifted displacements
+        xs = row[kw:kw + ow, :]             # (OW, C) static slice
+        wk = w_ref[0, kw]                   # (C, bf)
+        acc_ref[...] += jax.lax.dot_general(
+            xs, wk, (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype)
+
+    @pl.when(kh == kh_total - 1)
+    def _store():
+        out_ref[0, 0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
+               bf: int | None = None, out_dtype=jnp.float32,
+               interpret: bool = False) -> jnp.ndarray:
+    """VALID 2-D convolution, stride 1 (paper's h * A).
+
+    image: (N, H, W, C); kernels: (KH, KW, C, F) -> (N, OH, OW, F).
+    """
+    n, h, w, c = image.shape
+    kh, kw, c2, f = kernels.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch {image.shape} vs {kernels.shape}")
+    oh, ow = h - kh + 1, w - kw + 1
+    bf = bf or min(f, 128)
+    acc_dtype = jnp.float32
+
+    grid = (n * oh, -(-f // bf), kh)
+    kernel = functools.partial(
+        _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, acc_dtype=acc_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # One full image row (oh + kh), resident once per (row, kh).
+            pl.BlockSpec((1, 1, w, c),
+                         lambda i, j, k, oh=oh: (i // oh, i % oh + k, 0, 0)),
+            # One kh-slice of the filter bank: (1, KW, C, bf).
+            pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ow, bf),
+                               lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((ow, bf), acc_dtype)],
+        interpret=interpret,
+    )(image, kernels)

@@ -1,0 +1,151 @@
+"""Accumulator-resident blocked GEMM — the MMA facility's core, on TPU.
+
+Maps the paper's POWER10 Matrix Math Engine execution model onto Pallas:
+
+  * The output tile (the *virtual accumulator*, paper fig. 4) lives in a
+    VMEM scratch buffer for the whole k-loop and is written to HBM exactly
+    once — the analogue of accumulators being resident in the MME so that
+    "no output is placed on the results buses" during the compute phase
+    (paper section III).
+  * Each grid step along k streams one (bm, bk) X-panel and one (bk, bn)
+    Y-panel through VMEM and issues MXU rank-bk updates — the analogue of
+    the xv*ger* instructions streaming 128-bit VSR pairs.
+  * The pm* prefixed masked forms (paper section II-C) become iota masks on
+    the fringe blocks, so arbitrary M/N/K never require padded operands in
+    HBM and disabled lanes contribute exact zeros.
+
+Supported ger kinds (see repro.core.precision): f64 (interpret/VPU), f32,
+bf16, f16, int16 (adapted), int8 x uint8, packed int4.  The beyond-paper
+f32-as-3xbf16 MXU emulation is lowered as three passes in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import precision, tiling
+
+
+def _unpack_int4(v: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Unpack 2x int4 (two's complement, low nibble first) along ``axis``."""
+    axis = axis % v.ndim
+    lo = jnp.right_shift(jnp.left_shift(v, 4), 4)
+    hi = jnp.right_shift(v, 4)
+    stacked = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(v.shape)
+    shape[axis] *= 2
+    return stacked.reshape(shape)
+
+
+def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
+                 has_c, alpha, beta):
+    def kernel(*refs):
+        if has_c:
+            x_ref, y_ref, c_ref, out_ref, acc_ref = refs
+        else:
+            x_ref, y_ref, out_ref, acc_ref = refs
+        ki = pl.program_id(2)
+
+        # ---- prime the accumulator (xxsetaccz / accumulate forms) ----
+        @pl.when(ki == 0)
+        def _prime():
+            if has_c:
+                init = c_ref[...].astype(pol.acc_dtype)
+                if beta != 1.0:
+                    init = init * jnp.asarray(beta, pol.acc_dtype)
+                acc_ref[...] = -init if neg_acc else init
+            else:
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # ---- one rank-bk update:  acc += [-] X_panel @ Y_panel ----
+        x = x_ref[...]
+        y = y_ref[...]
+        if pol.packed_int4:
+            x = _unpack_int4(x, axis=1)
+            y = _unpack_int4(y, axis=0)
+        # pm*-style fringe mask along k: zero partial products past K.  Both
+        # panels are masked — out-of-bounds reads are undefined (NaN in
+        # interpret mode) and 0 * NaN would poison the accumulator.
+        # (m/n fringe is handled by Pallas dropping out-of-bounds stores.)
+        if k_steps * bk_logical != k_size:
+            kk = ki * bk_logical + jax.lax.broadcasted_iota(
+                jnp.int32, (1, x.shape[1]), 1)
+            x = jnp.where(kk < k_size, x, jnp.zeros_like(x))
+            y = jnp.where(kk.reshape(-1, 1) < k_size, y, jnp.zeros_like(y))
+        if jnp.issubdtype(pol.acc_dtype, jnp.integer):
+            x = x.astype(jnp.int32)
+            y = y.astype(jnp.int32)
+        prod = jax.lax.dot_general(x, y, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=pol.acc_dtype)
+        acc_ref[...] += -prod if neg_product else prod
+
+        # ---- depriming: single HBM store of the virtual accumulator ----
+        @pl.when(ki == k_steps - 1)
+        def _store():
+            out = acc_ref[...]
+            if alpha != 1.0:
+                out = out * jnp.asarray(alpha, pol.acc_dtype)
+            out_ref[...] = out.astype(out_ref.dtype)
+
+    return kernel
+
+
+def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
+             c: jnp.ndarray | None = None, *,
+             kind: precision.Ger = precision.Ger.BF16GER2,
+             block: tuple[int, int, int] | None = None,
+             neg_product: bool = False, neg_acc: bool = False,
+             alpha: float = 1.0, beta: float = 1.0,
+             out_dtype=None, interpret: bool = False) -> jnp.ndarray:
+    """C <- alpha * [-](X @ Y)  [+ beta * (+/-)C]  with resident accumulator.
+
+    x: (M, K); y: (K, N); c: optional (M, N) accumulator input (the
+    pp/np/pn/nn accumulate forms).  int4 kind: K axis packed 2-per-byte.
+    """
+    pol = precision.policy(kind)
+    if kind == precision.Ger.F32GER_3XBF16:
+        raise ValueError("F32GER_3XBF16 is lowered in ops.mma_dot")
+    m, k_packed = x.shape
+    k2, n = y.shape
+    if k_packed != k2:
+        raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    pack = 2 if pol.packed_int4 else 1
+    k = k_packed * pack
+    out_dtype = out_dtype or pol.acc_dtype
+
+    cfg = (tiling.choose_blocks(m, n, k, kind) if block is None
+           else tiling.BlockConfig(*block))
+    tiling.assert_fits_vmem(cfg, kind)
+    bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    bk_packed = max(bk // pack, 1)
+    bk_logical = bk_packed * pack
+    grid = (-(-m // bm), -(-n // bn), -(-k_packed // bk_packed))
+
+    in_specs = [
+        pl.BlockSpec((bm, bk_packed), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk_packed, bn), lambda i, j, kk: (kk, j)),
+    ]
+    inputs = [x, y]
+    if c is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        inputs.append(c)
+
+    kernel = _make_kernel(
+        pol=pol, k_steps=grid[2], k_size=k, bk_logical=bk_logical,
+        neg_product=neg_product, neg_acc=neg_acc, has_c=c is not None,
+        alpha=alpha, beta=beta)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), pol.acc_dtype)],
+        interpret=interpret,
+    )(*inputs)

@@ -1,0 +1,143 @@
+"""Public, jit-friendly entry points for the MMA kernels.
+
+This is the "built-ins" layer of the paper (section IV): a thin, typed API
+with pre-defined semantics that the rest of the framework programs against,
+while scheduling/allocation is left to the compiler.  Dispatch:
+
+  * ``use_pallas=True``  -> the hand-tiled Pallas kernels (TPU target;
+    ``interpret=True`` executes them on CPU for validation).
+  * ``use_pallas=False`` -> an XLA `dot_general` with the same ger policy
+    (dtypes + preferred accumulation type).  On TPU, XLA lowers this to the
+    same MXU rank-k-update loop; this path is what the full models use under
+    jit/pjit so that SPMD partitioning sees a plain einsum it can shard.
+
+Both paths implement identical architected semantics and are tested against
+``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import precision
+from repro.kernels import mma_gemm as _gemm
+from repro.kernels import mma_conv as _conv
+from repro.kernels import ref as _ref
+
+Ger = precision.Ger
+
+
+def _split_bf16(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    hi = v.astype(jnp.bfloat16)
+    lo = (v - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+    return hi, lo
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "block", "use_pallas", "interpret", "out_dtype"))
+def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
+            c: jnp.ndarray | None = None, *,
+            kind: Ger = Ger.BF16GER2,
+            block: tuple[int, int, int] | None = None,
+            use_pallas: bool = True, interpret: bool = True,
+            out_dtype=None) -> jnp.ndarray:
+    """``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N)."""
+    pol = precision.policy(kind)
+
+    if kind == Ger.F32GER_3XBF16:
+        # Beyond-paper: fp32 on the MXU as three bf16 rank-k passes
+        # (hi*hi + hi*lo + lo*hi); the fp32 accumulator tile is resident
+        # across all three, mirroring the accumulate-form chaining of
+        # xvbf16ger2pp instructions.
+        xh, xl = _split_bf16(x.astype(jnp.float32))
+        yh, yl = _split_bf16(y.astype(jnp.float32))
+        out = mma_dot(xh, yh, c, kind=Ger.BF16GER2, block=block,
+                      use_pallas=use_pallas, interpret=interpret)
+        out = mma_dot(xh, yl, out, kind=Ger.BF16GER2, block=block,
+                      use_pallas=use_pallas, interpret=interpret)
+        out = mma_dot(xl, yh, out, kind=Ger.BF16GER2, block=block,
+                      use_pallas=use_pallas, interpret=interpret)
+        return out.astype(out_dtype or jnp.float32)
+
+    x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
+    y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
+    if use_pallas:
+        return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
+                              out_dtype=out_dtype, interpret=interpret)
+    out = _ref.ger(x, y, kind, acc=c)
+    return out.astype(out_dtype) if out_dtype else out
+
+
+def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,
+                       kind: Ger = Ger.I16GER2,
+                       acc: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Saturating accumulation forms (xvi16ger2s / xvi8ger4spp).
+
+    Architected semantics: each rank-``arch_rank`` update saturates the
+    int32 accumulator instead of wrapping.  Implemented as a fold over
+    rank-sized K groups with clamped adds (VPU path on TPU — saturating
+    integer accumulate has no MXU analogue; documented in DESIGN.md).
+    """
+    pol = precision.policy(kind)
+    if not jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        raise ValueError("saturating forms are integer-only")
+    m, k = x.shape
+    r = pol.arch_rank
+    assert k % r == 0, (k, r)
+    i32max = jnp.int32(jnp.iinfo(jnp.int32).max)
+    i32min = jnp.int32(jnp.iinfo(jnp.int32).min)
+    # One architected rank-r product group cannot overflow int32
+    # (2 * 32767^2 < 2^31 - 1 for int16; 4 * 127 * 255 for int8), so group
+    # products are exact in int32; only the accumulate saturates.
+    xg = x.reshape(m, k // r, r).swapaxes(0, 1).astype(jnp.int32)
+    yg = y.reshape(k // r, r, y.shape[1]).astype(jnp.int32)
+
+    def step(a, xy):
+        xs, ys = xy
+        p = lax.dot_general(xs, ys, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+        s = a + p  # wraps (two's complement) — detect and saturate
+        overflow_pos = (p > 0) & (s < a)
+        overflow_neg = (p < 0) & (s > a)
+        s = jnp.where(overflow_pos, i32max, s)
+        s = jnp.where(overflow_neg, i32min, s)
+        return s, None
+
+    init = (jnp.zeros((m, y.shape[1]), jnp.int32) if acc is None
+            else acc.astype(jnp.int32))
+    out, _ = lax.scan(step, init, (xg, yg))
+    return out
+
+
+def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
+               use_pallas: bool = True, interpret: bool = True):
+    """Prefixed masked rank-k update (paper eq. 3), matrix granularity.
+
+    The Pallas path applies the masks to the operands before the kernel —
+    on TPU the masks are fused into the VMEM loads; disabled lanes
+    contribute exact zeros and can never raise exceptions, matching the
+    architected pm* behaviour.
+    """
+    pol = precision.policy(kind)
+    if pol.packed_int4:
+        return _ref.pm_ger(x, y, kind, xmask, ymask, pmask, acc)
+    xm = xmask.astype(x.dtype)[:, None]
+    if pmask is not None:
+        xm = xm * pmask.astype(x.dtype)[None, :]
+    xz = (x * xm).astype(x.dtype)
+    yz = (y * ymask.astype(y.dtype)[None, :]).astype(y.dtype)
+    return mma_dot(xz, yz, acc, kind=kind, use_pallas=use_pallas,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bf"))
+def mma_conv2d(image, kernels, *, use_pallas: bool = True,
+               interpret: bool = True, bf: int | None = None):
+    """SCONV: VALID stride-1 2-D convolution (paper section V-B)."""
+    if use_pallas:
+        return _conv.mma_conv2d(image, kernels, bf=bf, interpret=interpret)
+    return _ref.conv2d(image, kernels)

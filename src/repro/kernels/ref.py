@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every MMA kernel.
+
+These implement the architected semantics of the paper's instructions
+(sections II-B, II-C) at matrix granularity, with no tiling, masking tricks,
+or Pallas — they are the ground truth the Pallas kernels are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import precision
+
+
+def unpack_int4(x_packed: jnp.ndarray) -> jnp.ndarray:
+    """Unpack two's-complement nibbles (low nibble first) along last axis."""
+    lo = jnp.left_shift(x_packed, 4)
+    lo = jnp.right_shift(lo, 4)                      # arithmetic: sign-extends
+    hi = jnp.right_shift(x_packed, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(*x_packed.shape[:-1], -1)
+
+
+def ger(x: jnp.ndarray, y: jnp.ndarray, kind: precision.Ger,
+        acc: jnp.ndarray | None = None,
+        neg_product: bool = False, neg_acc: bool = False) -> jnp.ndarray:
+    """Rank-k update oracle:  A <- [-] X @ Y [+/- A]   (paper eq. 1 and 2).
+
+    x: (M, K), y: (K, N) in the family's input dtype (int4: packed along K).
+    Returns the accumulator in the family's accumulator dtype.
+    """
+    pol = precision.policy(kind)
+    if pol.packed_int4:
+        x = unpack_int4(x)
+        y = unpack_int4(y.T).T if y.dtype == jnp.int8 else y
+    if jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        prod = lax.dot_general(
+            x.astype(jnp.int32), y.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    else:
+        prod = lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=pol.acc_dtype)
+    prod = prod.astype(pol.acc_dtype)
+    if neg_product:
+        prod = -prod
+    if acc is None:
+        return prod
+    acc = acc.astype(pol.acc_dtype)
+    return prod + (-acc if neg_acc else acc)
+
+
+def pm_ger(x: jnp.ndarray, y: jnp.ndarray, kind: precision.Ger,
+           xmask: jnp.ndarray, ymask: jnp.ndarray,
+           pmask: jnp.ndarray | None = None,
+           acc: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Prefixed masked update oracle (paper eq. 3).
+
+    xmask: (M,) bool — enabled rows of X; ymask: (N,) bool — enabled columns
+    of Y^T; pmask: (K,) bool — enabled partial products along the rank.
+    Disabled lanes contribute exactly zero (and on hardware raise no
+    exceptions; here: are multiplied out by zeros).
+    """
+    pol = precision.policy(kind)
+    if pol.packed_int4:
+        x, y = unpack_int4(x), unpack_int4(y.T).T
+    xm = xmask.astype(x.dtype)[:, None]
+    ym = ymask.astype(y.dtype)[None, :]
+    if pmask is not None:
+        xm = xm * pmask.astype(x.dtype)[None, :]
+    prod = ger((x * xm).astype(x.dtype), (y * ym).astype(y.dtype),
+               kind if not pol.packed_int4 else precision.Ger.I8GER4)
+    prod = prod.astype(pol.acc_dtype)
+    return prod if acc is None else prod + acc.astype(pol.acc_dtype)
+
+
+def gemm(x: jnp.ndarray, y: jnp.ndarray, kind: precision.Ger,
+         c: jnp.ndarray | None = None,
+         alpha: float = 1.0, beta: float = 0.0) -> jnp.ndarray:
+    """Full GEMM oracle: C <- alpha * X @ Y + beta * C (paper eq. 4)."""
+    out = ger(x, y, kind)
+    out = alpha * out if alpha != 1.0 else out
+    if c is not None and beta != 0.0:
+        out = out + beta * c.astype(out.dtype)
+    return out
+
+
+def conv2d(image: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """SCONV oracle (paper section V-B): VALID 2-D convolution.
+
+    image: (N, H, W, C), kernels: (KH, KW, C, F).  No padding, stride 1 —
+    exactly the paper's h * A formulation, but computed by explicitly
+    materializing the Abar patch matrix (eq. 8), which is precisely what the
+    Pallas kernel avoids doing.
+    """
+    n, h, w, c = image.shape
+    kh, kw, _, f = kernels.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    # Materialize Abar: (N, OH, OW, KH*KW*C) patch matrix.
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(image[:, i:i + oh, j:j + ow, :])
+    abar = jnp.concatenate(patches, axis=-1)
+    hbar = kernels.reshape(kh * kw * c, f)
+    return lax.dot_general(
+        abar.reshape(n * oh * ow, kh * kw * c), hbar,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(n, oh, ow, f)

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+MUST be run as its own process (the device-count flag above is consumed at
+first jax init).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get as get_arch, ARCHS
+from repro.configs.base import ArchConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as SP
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import api as par
+from repro.roofline import analysis as RA
+from repro.train import steps as S
+
+
+def _shardings_for(kind, cfg, args, rules, fsdp: bool = True):
+    """NamedSharding pytrees matching input_specs(kind) args."""
+    mesh = rules.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pax = M.param_axes(cfg)
+
+    def pspecs(ab, ax):
+        return jax.tree.map(
+            lambda a, x: ns(par.param_spec(a.shape, x, rules, fsdp=fsdp)),
+            ab, ax)
+
+    if kind == "train":
+        state_ax = S.train_state_axes(cfg)
+        st = args["state"]
+        sh_state = {
+            "params": pspecs(st["params"], pax),
+            "opt": {
+                "step": ns(P()),
+                "m": pspecs(st["opt"]["m"], pax),
+                "v": pspecs(st["opt"]["v"], pax),
+            },
+        }
+        if "master" in st["opt"]:
+            sh_state["opt"]["master"] = pspecs(st["opt"]["master"], pax)
+        if "residual" in st:
+            sh_state["residual"] = pspecs(st["residual"], pax)
+        bx = SP.batch_axes(cfg)
+        sh_batch = {k: ns(par.activation_spec(args["batch"][k].shape,
+                                              bx[k], rules))
+                    for k in args["batch"]}
+        return {"state": sh_state, "batch": sh_batch}
+    if kind == "prefill":
+        bx = SP.batch_axes(cfg, for_train=False)
+        return {
+            "params": pspecs(args["params"], pax),
+            "batch": {k: ns(par.activation_spec(args["batch"][k].shape,
+                                                bx[k], rules))
+                      for k in args["batch"]},
+        }
+    # decode
+    cax = M.cache_axes(cfg)
+    sh_cache = {k: ns(par.activation_spec(args["cache"][k].shape,
+                                          cax[k], rules))
+                for k in args["cache"]}
+    return {
+        "params": pspecs(args["params"], pax),
+        "cache": sh_cache,
+        "tokens": ns(par.activation_spec(args["tokens"].shape,
+                                         ("batch", None), rules)),
+    }
+
+
+def step_fn_for(kind, cfg, bf16_weights: bool = False,
+                compress: bool = False, bf16_params: bool = False):
+    if kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        ts = S.make_train_step(cfg, opt_cfg, bf16_weights=bf16_weights,
+                               compress=compress, bf16_params=bf16_params)
+        return lambda state, batch: ts(state, batch)
+    if kind == "prefill":
+        ps = S.make_prefill_step(cfg)
+        return lambda params, batch: ps(params, batch)
+    def serve(params, cache, tokens):
+        logits, new_cache = M.decode_step(params, cache, tokens, cfg)
+        return logits, new_cache
+    return serve
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
+             fsdp: bool = True, seq_shard: bool = True,
+             rolled: bool = False, bf16_weights: bool = False,
+             remat: str = "nothing", moe_gather: bool = False,
+             pure_dp: bool = False, compress: bool = False,
+             bf16_params: bool = False, q_chunk: int = 0,
+             variant: str = "") -> dict:
+    cfg = get_arch(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "ok", "variant": variant,
+           "opts": {"fsdp": fsdp, "seq_shard": seq_shard,
+                    "bf16_weights": bf16_weights, "remat": remat,
+                    "moe_gather": moe_gather, "pure_dp": pure_dp,
+                    "compress": compress, "bf16_params": bf16_params}}
+    skip = SP.cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        _write(rec, outdir)
+        return rec
+
+    # Unroll layer scans so cost_analysis / collective parsing see the whole
+    # step (XLA HloCostAnalysis counts while bodies once, not x trip-count).
+    # ``rolled`` keeps the production rolled scan (fast compile) — used for
+    # the multi-pod pass/fail sweep where only sharding validity matters.
+    M.SCAN_UNROLL = not rolled
+    M.REMAT_POLICY = remat
+    from repro.models import moe as MOE
+    MOE.GATHER_DISPATCH = moe_gather
+    if q_chunk:
+        from repro.models import layers as LYR
+        LYR.Q_CHUNK = q_chunk if q_chunk > 0 else 1 << 30
+        rec["opts"]["q_chunk"] = q_chunk
+    rec["rolled"] = rolled
+
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules = par.default_rules(mesh)
+    import dataclasses
+    if pure_dp:
+        # Small-model mode: batch over EVERY mesh axis, no tensor
+        # parallelism, replicated params (130M-class fits every chip).
+        all_axes = tuple(mesh.axis_names)
+        rules = dataclasses.replace(
+            rules,
+            rules={k: None for k in rules.rules} | {"batch": all_axes},
+            fsdp_axes=())
+        fsdp = False
+    if not seq_shard:
+        rules = dataclasses.replace(
+            rules, rules={**rules.rules, "seq": None})
+    kind, args = SP.input_specs(cfg, shape, compress=compress,
+                                bf16_params=bf16_params)
+    shardings = _shardings_for(kind, cfg, args, rules, fsdp=fsdp)
+    fn = step_fn_for(kind, cfg, bf16_weights=bf16_weights,
+                     compress=compress, bf16_params=bf16_params)
+
+    with par.use_rules(rules):
+        ordered_keys = list(args)
+        jfn = jax.jit(
+            fn, in_shardings=tuple(shardings[k] for k in ordered_keys))
+        with mesh:
+            lowered = jfn.lower(*[args[k] for k in ordered_keys])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    rec["t_lower_s"] = round(t_lower, 1)
+    rec["t_compile_s"] = round(t_compile, 1)
+
+    # ---- memory analysis ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis"] = {"error": str(e)}
+
+    # ---- analytic per-device bytes (params+opt+cache+batch) ----
+    rec["analytic_bytes_per_device"] = _analytic_bytes(args, shardings, mesh)
+
+    # ---- cost analysis ----
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds")
+                or k.startswith("bytes accessed"))}
+    except Exception as e:
+        rec["cost_analysis"] = {"error": str(e)}
+
+    # ---- collective bytes from optimized HLO ----
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = RA.collective_stats(hlo)
+        rec["hlo_bytes"] = len(hlo)
+    except Exception as e:
+        rec["collectives"] = {"error": str(e)}
+
+    # ---- roofline terms ----
+    chips = mesh.devices.size
+    flops = rec.get("cost_analysis", {}).get("flops", 0.0)
+    bytes_acc = rec.get("cost_analysis", {}).get("bytes accessed", 0.0)
+    cbytes = rec.get("collectives", {}).get("total_bytes", 0)
+    terms = RA.RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        collective_bytes_per_chip=float(cbytes),
+        model_flops=RA.model_flops_for(cfg, SP.SHAPES[shape]))
+    rec["roofline"] = terms.to_json()
+    rec["wall_s"] = round(time.time() - t0, 1)
+    _write(rec, outdir)
+    return rec
+
+
+def _analytic_bytes(args, shardings, mesh) -> int:
+    """Sum of input bytes per device given the shardings."""
+    total = 0
+    flat_a = jax.tree.leaves(args)
+    flat_s = jax.tree.leaves(shardings,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    for a, s in zip(flat_a, flat_s):
+        n = 1
+        for d in a.shape:
+            n *= d
+        size = n * jnp.dtype(a.dtype).itemsize
+        try:
+            shard_shape = s.shard_shape(a.shape)
+            n_s = 1
+            for d in shard_shape:
+                n_s *= d
+            size = n_s * jnp.dtype(a.dtype).itemsize
+        except Exception:
+            size = size // mesh.devices.size
+        total += size
+    return int(total)
+
+
+def _write(rec, outdir):
+    os.makedirs(outdir, exist_ok=True)
+    name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+            + ("__rolled" if rec.get("rolled") else "")
+            + (f"__{rec['variant']}" if rec.get("variant") else "")
+            + ".json")
+    with open(os.path.join(outdir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SP.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="disable sequence-parallel residual (ablation)")
+    ap.add_argument("--rolled", action="store_true",
+                    help="keep rolled layer scans (fast compile; cost "
+                         "analysis under-reports x num_layers)")
+    ap.add_argument("--bf16-weights", action="store_true",
+                    help="perf lever: bf16 compute view of fp32 weights "
+                         "(halves FSDP all-gather bytes)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="perf lever: replicate params over data axis "
+                         "(kills weight all-gathers, costs memory)")
+    ap.add_argument("--remat", default="nothing",
+                    choices=["nothing", "dots", "everything"],
+                    help="perf lever: activation checkpoint policy")
+    ap.add_argument("--moe-gather", action="store_true",
+                    help="perf lever: gather-based MoE dispatch/combine")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="perf lever: batch over all mesh axes, no TP, "
+                         "replicated params (small models)")
+    ap.add_argument("--compress", action="store_true",
+                    help="perf lever: bf16 error-feedback gradient "
+                         "compression on the DP all-reduce")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="perf lever: bf16 at-rest params with fp32 "
+                         "master in opt state")
+    ap.add_argument("--qchunk", type=int, default=0,
+                    help="perf lever: attention q-chunk (-1 = unchunked)")
+    ap.add_argument("--variant", default="",
+                    help="tag for the output record filename")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = ([(a, s, mp) for a in ARCHS for s in SP.SHAPES
+              for mp in (False, True)] if args.all
+             else [(args.arch, args.shape, args.multi_pod)])
+    failures = 0
+    for arch, shape, mp in cells:
+        try:
+            rec = run_cell(arch, shape, mp, args.out,
+                           seq_shard=not args.no_seq_shard,
+                           rolled=args.rolled, fsdp=not args.no_fsdp,
+                           bf16_weights=args.bf16_weights,
+                           remat=args.remat, moe_gather=args.moe_gather,
+                           pure_dp=args.pure_dp, compress=args.compress,
+                           bf16_params=args.bf16_params,
+                           q_chunk=args.qchunk, variant=args.variant)
+            rf = rec.get("roofline", {})
+            print(f"[{rec['status']:7s}] {arch} {shape} {rec['mesh']} "
+                  f"bottleneck={rf.get('bottleneck', '-')} "
+                  f"frac={rf.get('roofline_fraction', 0):.3f} "
+                  f"wall={rec.get('wall_s', 0)}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"[FAIL   ] {arch} {shape} "
+                  f"{'2x16x16' if mp else '16x16'}", flush=True)
+            traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

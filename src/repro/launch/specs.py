@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns (fn_kind, abstract_args dict) —
+weak-type-correct stand-ins; nothing is allocated.  The assigned shape
+table (task spec):
+
+    train_4k      seq=4096    global_batch=256   -> train_step
+    prefill_32k   seq=32768   global_batch=32    -> prefill_step
+    decode_32k    seq=32768   global_batch=128   -> serve_step
+    long_500k     seq=524288  global_batch=1     -> serve_step
+                  (sub-quadratic archs only; see ArchConfig.supports_long_context)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import steps as S
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_skip_reason(cfg, shape_name: str) -> str | None:
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("full quadratic attention at 512k context; no SWA/SSM "
+                "path (DESIGN.md section 4)")
+    return None
+
+
+def batch_specs(cfg, *, batch: int, seq: int, for_train: bool = True):
+    """Abstract train/prefill batch."""
+    if cfg.is_enc_dec:
+        b = {
+            "frames": sds((batch, seq, cfg.d_model), jnp.float32),
+            "tokens": sds((batch, cfg.decoder_len), jnp.int32),
+            "labels": sds((batch, cfg.decoder_len), jnp.int32),
+        }
+    else:
+        b = {
+            "tokens": sds((batch, seq), jnp.int32),
+            "labels": sds((batch, seq), jnp.int32),
+        }
+    if cfg.vision_prefix:
+        b["vision_embeds"] = sds((batch, cfg.vision_prefix, cfg.d_model),
+                                 jnp.float32)
+        b["positions"] = sds((3, batch, seq), jnp.int32)
+    if not for_train:
+        b.pop("labels", None)
+    return b
+
+
+def batch_axes(cfg, for_train: bool = True):
+    ax = ({"frames": ("batch", None, None), "tokens": ("batch", None),
+           "labels": ("batch", None)} if cfg.is_enc_dec else
+          {"tokens": ("batch", None), "labels": ("batch", None)})
+    if cfg.vision_prefix:
+        ax["vision_embeds"] = ("batch", None, None)
+        ax["positions"] = (None, "batch", None)
+    if not for_train:
+        ax.pop("labels", None)
+    return ax
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+
+
+def abstract_train_state(cfg, compress: bool = False,
+                         bf16_params: bool = False):
+    opt_cfg = adamw.AdamWConfig()
+    return jax.eval_shape(
+        lambda: S.init_train_state(cfg, jax.random.key(0), opt_cfg,
+                                   compress=compress,
+                                   bf16_params=bf16_params))
+
+
+def abstract_cache(cfg, *, batch: int, seq: int):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch=batch, seq_len=seq))
+
+
+def input_specs(cfg, shape_name: str, *, compress: bool = False,
+                bf16_params: bool = False):
+    """Returns (kind, args: dict of abstract values, axes: logical axes)."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] == "train":
+        return "train", {
+            "state": abstract_train_state(cfg, compress=compress,
+                                          bf16_params=bf16_params),
+            "batch": batch_specs(cfg, batch=b, seq=s),
+        }
+    if info["kind"] == "prefill":
+        return "prefill", {
+            "params": abstract_params(cfg),
+            "batch": batch_specs(cfg, batch=b, seq=s, for_train=False),
+        }
+    return "decode", {
+        "params": abstract_params(cfg),
+        "cache": abstract_cache(cfg, batch=b, seq=s),
+        "tokens": sds((b, 1), jnp.int32),
+    }

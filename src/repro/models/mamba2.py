@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+The SSD chunked algorithm is itself a sequence of small-matrix rank-k
+updates (intra-chunk "attention-like" products, chunk-state outer products,
+inter-chunk state propagation), which is why the paper's MMA claim — "the
+instructions can be used as building blocks of other computations" —
+extends to attention-free models: every einsum below routes through the
+facility and lowers to resident-accumulator MXU loops.
+
+Layout: x (B, L, H, P) with H = d_inner / headdim heads, P = headdim,
+N = d_state, single B/C group (ngroups=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import facility
+from repro.models import layers
+from repro.parallel.api import shard
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in, nheads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": layers._dense_init(
+            ks[0], (d, 2 * d_in + 2 * n + nheads)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads,
+                                      dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers._dense_init(ks[3], (d_in, d)),
+    }
+
+
+def mamba2_axes(cfg):
+    return {"in_proj": ("embed", "mlp"), "conv_w": (None, "mlp"),
+            "conv_b": ("mlp",), "A_log": ("ssm_heads",),
+            "D": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+            "norm_scale": ("mlp",), "out_proj": ("mlp", "embed")}
+
+
+def _split_proj(proj, cfg):
+    d_in, nheads, _ = dims(cfg)
+    n = cfg.ssm_state
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W.  conv_state: (B, W-1, C) history."""
+    w = conv_w.shape[0]
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        xin = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xin[:, i:i + xbc.shape[1], :] * conv_w[i]
+              for i in range(w))
+    return jax.nn.silu(out + conv_b).astype(xbc.dtype), xin[:, -(w - 1):, :]
+
+
+def _segsum(dA):
+    """Stable segment-sum: out[..., i, j] = sum dA[..., j+1..i] (j < i)."""
+    l = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk, return_state: bool = False):
+    """SSD scan (ssd_minimal_discrete, Mamba2 paper listing 1).
+
+    x (b,l,h,p); dt (b,l,h) [post-softplus]; A (h,) negative decay;
+    B, C (b,l,n).  Returns y (b,l,h,p) [, final_state (b,h,n,p)] — the
+    final state is the prefill->decode handoff.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    # discretize
+    dA = dt * A                                           # (b,l,h)
+    xt = (x * dt[..., None]).astype(x.dtype)              # dt-weighted input
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, dAc = r(xt), r(dA)
+    Bc, Cc = r(B), r(C)
+    dAc = dAc.transpose(0, 1, 3, 2)                       # (b,nc,h,L)
+    dA_cum = jnp.cumsum(dAc, axis=-1)                     # (b,nc,h,L)
+
+    # 1) intra-chunk (the "quadratic attention" branch of the duality)
+    L = jnp.exp(_segsum(dAc))                             # (b,nc,h,L,L)
+    scores = facility.feinsum("bcln,bcsn->bcls", Cc, Bc,
+                              out_dtype=jnp.float32)      # (b,nc,L,L)
+    att = scores[:, :, None] * L                          # (b,nc,h,L,L)
+    y_intra = facility.feinsum("bchls,bcshp->bclhp",
+                               att.astype(x.dtype), xc)
+
+    # 2) chunk states: decayed outer products B^T (dt x)
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)     # (b,nc,h,L)
+    states = facility.feinsum(
+        "bcln,bclhp->bchnp",
+        Bc, (xc * decay_states.transpose(0, 1, 3, 2)[..., None]).astype(x.dtype),
+        out_dtype=jnp.float32)                            # (b,nc,h,n,p)
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp                                     # (b,h,n,p), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit *previous*
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,h,n,p)
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(dA_cum)                         # (b,nc,h,L)
+    y_inter = facility.feinsum(
+        "bcln,bchnp->bclhp", Cc,
+        prev_states.astype(x.dtype)) * state_decay.transpose(
+            0, 1, 3, 2)[..., None].astype(x.dtype)
+
+    y = (y_intra.astype(jnp.float32) + y_inter.astype(jnp.float32)
+         + x.reshape(b, nc, chunk, h, p).astype(jnp.float32) * D[:, None])
+    y = y.reshape(b, l, h, p).astype(x.dtype)
+    if return_state:
+        # scan carry after the last iteration = state after all chunks
+        return y, final_state
+    return y
+
+
+def apply_mamba2(p, x, cfg, state=None):
+    """Full block. Training/prefill: state=None, seq scanned chunked.
+    Decode: x (B,1,d) with state dict {'ssm','conv'} -> (out, new_state)."""
+    b, l, d = x.shape
+    d_in, nheads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    proj = facility.fdot(x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:
+        xbc_raw = xbc
+        xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+        xh = xs.reshape(b, l, nheads, cfg.ssm_headdim)
+        xh = shard(xh, "batch", None, "ssm_heads", None)
+        chunk = min(cfg.ssm_chunk, l)   # short-sequence smoke/training
+        y, final = ssd_chunked(xh, dt, A, B, C, p["D"], chunk,
+                               return_state=True)
+        # prefill -> decode handoff: final SSM state + conv tail
+        w = cfg.ssm_conv_width
+        new_state = {"ssm": final,
+                     "conv": jnp.pad(xbc_raw, ((0, 0), (w - 1, 0), (0, 0))
+                                     )[:, -(w - 1):, :]}
+    else:
+        xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       conv_state=state["conv"])
+        xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+        xh = xs.reshape(b, l, nheads, cfg.ssm_headdim)
+        # single-token recurrent update: s <- exp(dt A) s + dt B x
+        dA = jnp.exp(dt[:, 0] * A)                        # (b,h)
+        sstate = state["ssm"]                             # (b,h,n,p)
+        upd = facility.feinsum("bn,bhp->bhnp", B[:, 0],
+                               (xh[:, 0] * dt[:, 0, :, None]).astype(x.dtype),
+                               out_dtype=jnp.float32)
+        sstate = sstate * dA[..., None, None] + upd
+        y = facility.feinsum("bn,bhnp->bhp", C[:, 0],
+                             sstate.astype(x.dtype))
+        y = (y.astype(jnp.float32)
+             + xh[:, 0].astype(jnp.float32) * p["D"][:, None])
+        y = y[:, None].astype(x.dtype)
+        new_state = {"ssm": sstate, "conv": conv_state}
+
+    y = y.reshape(b, l, d_in)
+    # gated RMSNorm (mamba2 block output norm)
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = g.astype(jnp.float32)
+    g = (gf * jax.lax.rsqrt((gf * gf).mean(-1, keepdims=True) + cfg.norm_eps)
+         * p["norm_scale"]).astype(x.dtype)
+    return facility.fdot(g, p["out_proj"]), new_state
+
+
+def init_decode_state(cfg, batch, dtype=jnp.float32):
+    d_in, nheads, conv_dim = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,34 @@
+"""Gradient compression for the DP all-reduce: bf16 payload with fp32
+error-feedback residual (1-bit-Adam-style EF, at bf16 granularity).
+
+Halves all-reduce bytes on the ('pod','data') axes; the residual keeps the
+long-run update unbiased.  Applied between the grad computation and the
+optimizer, so under pjit the all-reduce XLA emits for the DP axes moves
+bf16 instead of fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residual):
+    """Returns (bf16 grads-to-reduce, new residual)."""
+    def one(g, r):
+        full = g.astype(jnp.float32) + r
+        q = full.astype(jnp.bfloat16)
+        return q, full - q.astype(jnp.float32)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))
+
+
+def decompress(qgrads):
+    return jax.tree.map(lambda q: q.astype(jnp.float32), qgrads)

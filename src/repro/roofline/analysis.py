@@ -1,0 +1,176 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs  / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes  / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  XLA reports
+them for the *partitioned per-device module*, so they are per-chip numbers
+already; we multiply by ``chips`` to get globals and keep both.
+collective_bytes is parsed from the optimized HLO text: the summed operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (one count per op instance, per device).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[16,512,8192]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind (per-device module)."""
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_shapes, single_shape, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in m.group(0):
+            continue  # async pair: count the -start only
+        shape_str = tuple_shapes if tuple_shapes else single_shape
+        by_kind[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {"bytes_by_kind": by_kind, "counts": counts,
+            "total_bytes": total}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float            # 6*N*D (dense) or 6*N_active*D (MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / V5E["peak_flops"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / V5E["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / V5E["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound that is useful MXU compute: the score.
+
+        model_flops / chips / peak   is the unavoidable compute time;
+        divided by the achievable step-time bound -> how close the compiled
+        program is to the ideal 'only useful FLOPs, perfectly overlapped'.
+        """
+        ideal = self.model_flops / self.chips / V5E["peak_flops"]
+        bound = self.step_time_lower_bound
+        return ideal / bound if bound else 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def _encdec_split(cfg) -> tuple[float, float]:
+    """Rough (encoder, decoder) active-param split for enc-dec archs:
+    encoder = enc_layers * (attn + ffn); decoder adds cross-attn."""
+    d = cfg.d_model
+    attn = d * cfg.head_dim * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+    ffn = d * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+    n_enc = cfg.encoder_layers * (attn + ffn)
+    n_dec = cfg.num_layers * (2 * attn + ffn) + 2 * cfg.vocab_size * d
+    return n_enc, n_dec
+
+
+def model_flops_for(cfg, shape_info) -> float:
+    """6*N*D training / 2*N*D inference FLOPs (D = tokens processed).
+
+    Enc-dec archs split N: encoder params see seq (frames), decoder params
+    see decoder_len tokens."""
+    n = cfg.active_param_count()
+    b, s = shape_info["batch"], shape_info["seq"]
+    if shape_info["kind"] == "train":
+        if cfg.is_enc_dec:
+            n_enc, n_dec = _encdec_split(cfg)
+            return 6.0 * b * (n_enc * s + n_dec * cfg.decoder_len)
+        return 6.0 * n * b * s
+    if shape_info["kind"] == "prefill":
+        if cfg.is_enc_dec:
+            n_enc, n_dec = _encdec_split(cfg)
+            return 2.0 * b * (n_enc * s + n_dec * cfg.decoder_len)
+        return 2.0 * n * b * s
+    # decode: one token per sequence
+    return 2.0 * n * shape_info["batch"]

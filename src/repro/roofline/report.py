@@ -1,0 +1,142 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json records.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+
+Produces markdown for §Dry-run (multi-pod pass/fail + memory) and
+§Roofline (single-pod terms table).  EXPERIMENTS.md includes the output
+between AUTOGEN markers; rerunning this script refreshes them in place.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["deepseek-7b", "h2o-danube-3-4b", "deepseek-67b", "glm4-9b",
+              "whisper-small", "zamba2-1.2b", "deepseek-moe-16b",
+              "mixtral-8x22b", "mamba2-130m", "qwen2-vl-7b"]
+
+
+def load(dirname):
+    """Baseline records only (variant-tagged hillclimb records live in
+    §Perf via compare_variants; the main tables are baselines)."""
+    recs = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(f))
+        if r.get("variant"):
+            continue
+        key = (r["arch"], r["shape"], r["mesh"], bool(r.get("rolled")))
+        recs[key] = r
+    return recs
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def dryrun_table(recs) -> str:
+    """Multi-pod (2x16x16) compile status per cell."""
+    lines = ["| arch | shape | status | compile | args/dev | temp/dev | "
+             "collectives (ag/ar/rs/a2a/cp) |",
+             "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = (recs.get((a, s, "2x16x16", True))
+                 or recs.get((a, s, "2x16x16", False)))
+            if r is None:
+                lines.append(f"| {a} | {s} | MISSING | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | skipped | | | | "
+                             f"{r['reason'][:40]}… |")
+                continue
+            ma = r.get("memory_analysis", {})
+            co = r.get("collectives", {}).get("counts", {})
+            cstr = "/".join(str(co.get(k, 0)) for k in (
+                "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"))
+            lines.append(
+                f"| {a} | {s} | {r['status']} | {r.get('t_compile_s', '-')}s "
+                f"| {ma.get('argument_size_in_bytes', 0) / 2**30:.2f} GiB "
+                f"| {ma.get('temp_size_in_bytes', 0) / 2**30:.2f} GiB "
+                f"| {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    """Single-pod (16x16) roofline terms per cell."""
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+             "MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "16x16", False))
+            rolled_note = ""
+            if r is None:
+                r = recs.get((a, s, "16x16", True))
+                if r is not None and r.get("status") == "ok":
+                    # rolled fallback: while-body costs counted once; terms
+                    # under-report by ~num_layers (footnote in EXPERIMENTS)
+                    rolled_note = " ⚠rolled"
+                else:
+                    r_sk = (recs.get((a, s, "2x16x16", False))
+                            or recs.get((a, s, "2x16x16", True)))
+                    if r_sk and r_sk["status"] == "skipped":
+                        lines.append(f"| {a} | {s} | skipped "
+                                     f"(sub-quadratic n/a) | | | | | |")
+                    else:
+                        lines.append(f"| {a} | {s} | PENDING | | | | | |")
+                    continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | skipped | | | | | |")
+                continue
+            rf = r["roofline"]
+            frac = (f"{rf['roofline_fraction']:.3f}" if not rolled_note
+                    else "n/a")
+            lines.append(
+                f"| {a} | {s} | {_fmt_s(rf['t_compute_s'])}{rolled_note} "
+                f"| {_fmt_s(rf['t_memory_s'])} "
+                f"| {_fmt_s(rf['t_collective_s'])} "
+                f"| **{rf['bottleneck']}** "
+                f"| {rf['useful_flops_ratio']:.2f} "
+                f"| {frac} |")
+    return "\n".join(lines)
+
+
+def inject(md_path, marker, content):
+    begin = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- /AUTOGEN:{marker} -->"
+    text = open(md_path).read()
+    if begin not in text:
+        raise SystemExit(f"{md_path} missing marker {begin}")
+    pre = text.split(begin)[0]
+    post = text.split(end)[1]
+    open(md_path, "w").write(pre + begin + "\n" + content + "\n" + end
+                             + post)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if os.path.exists(args.md):
+        inject(args.md, "dryrun", dryrun_table(recs))
+        inject(args.md, "roofline", roofline_table(recs))
+        print(f"updated {args.md}")
+    else:
+        print(dryrun_table(recs))
+        print()
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

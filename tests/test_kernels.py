@@ -1,0 +1,212 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes (incl. non-multiple fringes), dtypes, and accumulate
+forms — the kernel-level contract of the MMA facility."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import Ger, policy
+from repro.kernels import mma_gemm as K
+from repro.kernels import mma_conv as KC
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_for(kind, shape, rng):
+    pol = policy(kind)
+    dt = jnp.dtype(pol.x_dtype)
+    if dt == jnp.int8:
+        return jnp.asarray(rng.integers(-128, 128, shape), jnp.int8)
+    if dt == jnp.uint8:
+        return jnp.asarray(rng.integers(0, 256, shape), jnp.uint8)
+    if dt == jnp.int16:
+        return jnp.asarray(rng.integers(-1000, 1000, shape), jnp.int16)
+    return jnp.asarray(rng.normal(size=shape), dt)
+
+
+GEMM_SHAPES = [
+    (8, 128, 128),      # single tile
+    (100, 300, 130),    # fringe on all dims
+    (256, 512, 256),    # multi-tile aligned
+    (33, 64, 257),      # small + fringe
+]
+
+FLOAT_KINDS = [Ger.BF16GER2, Ger.F16GER2, Ger.F32GER]
+INT_KINDS = [Ger.I8GER4, Ger.I16GER2]
+
+
+@pytest.mark.parametrize("kind", FLOAT_KINDS)
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+def test_gemm_float_matches_oracle(kind, m, k, n, rng):
+    x = _rand_for(kind, (m, k), rng)
+    y = _rand_for(kind, (k, n), rng)
+    got = K.mma_gemm(x, y, kind=kind, block=(32, 128, 128), interpret=True)
+    want = ref.ger(x, y, kind)
+    # atol 3e-5: the blocked kernel accumulates in k-panel order, the
+    # oracle in one dot — fp32 rounding differs in the last ulp(s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("kind", INT_KINDS)
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES[:3])
+def test_gemm_int_exact(kind, m, k, n, rng):
+    pol = policy(kind)
+    x = _rand_for(kind, (m, k), rng)
+    y = jnp.asarray(
+        rng.integers(0, 256, (k, n)), jnp.uint8) if pol.y_dtype == jnp.uint8 \
+        else _rand_for(kind, (k, n), rng)
+    got = K.mma_gemm(x, y, kind=kind, block=(32, 128, 128), interpret=True)
+    want = ref.ger(x, y, kind)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gemm_int4_packed(rng):
+    x = jnp.asarray(rng.integers(-128, 128, (32, 64)), jnp.int8)
+    y = jnp.asarray(rng.integers(-128, 128, (64, 128)), jnp.int8)
+    got = K.mma_gemm(x, y, kind=Ger.I4GER8, block=(32, 128, 128),
+                     interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.ger(x, y, Ger.I4GER8)))
+
+
+def test_gemm_fp64_interpret(rng):
+    """The paper's DGEMM case study dtype (VPU path on TPU)."""
+    with jax.experimental.enable_x64():
+        x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float64)
+        y = jnp.asarray(rng.normal(size=(128, 128)), jnp.float64)
+        got = K.mma_gemm(x, y, kind=Ger.F64GER, block=(32, 128, 128),
+                         interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x) @
+                                   np.asarray(y), rtol=1e-12)
+
+
+@pytest.mark.parametrize("neg_product,neg_acc", [(False, False),
+                                                 (True, False),
+                                                 (False, True),
+                                                 (True, True)])
+def test_gemm_accumulate_forms(neg_product, neg_acc, rng):
+    """pp / np / pn / nn suffixes (paper eq. 2)."""
+    x = jnp.asarray(rng.normal(size=(64, 192)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(192, 128)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    got = K.mma_gemm(x, y, c, kind=Ger.BF16GER2, block=(32, 128, 128),
+                     neg_product=neg_product, neg_acc=neg_acc,
+                     interpret=True)
+    want = ref.ger(x, y, Ger.BF16GER2, acc=c, neg_product=neg_product,
+                   neg_acc=neg_acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_alpha_beta(rng):
+    x = jnp.asarray(rng.normal(size=(64, 128)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(128, 128)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    got = K.mma_gemm(x, y, c, kind=Ger.BF16GER2, block=(32, 128, 128),
+                     alpha=0.5, beta=2.0, interpret=True)
+    want = 0.5 * (ref.ger(x, y, Ger.BF16GER2) + 2.0 * c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pm_masked_equals_oracle(rng):
+    """Prefixed pm* forms (paper eq. 3)."""
+    xm = jnp.asarray(rng.random(48) > 0.3)
+    ym = jnp.asarray(rng.random(96) > 0.3)
+    pm = jnp.asarray(rng.random(64) > 0.3)
+    x = jnp.asarray(rng.normal(size=(48, 64)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(64, 96)), jnp.bfloat16)
+    got = ops.mma_pm_dot(x, y, kind=Ger.BF16GER2, xmask=xm, ymask=ym,
+                         pmask=pm)
+    want = ref.pm_ger(x, y, Ger.BF16GER2, xm, ym, pm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pm_masked_no_nan_from_disabled_lanes(rng):
+    """Disabled rows/cols never contaminate the result (architected: no
+    exceptions from disabled computations)."""
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    x = x.at[3].set(jnp.nan)
+    y = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    xm = jnp.ones(16, bool).at[3].set(False)
+    ym = jnp.ones(16, bool)
+    got = ops.mma_pm_dot(x, y, kind=Ger.F32GER, xmask=xm, ymask=ym)
+    assert not bool(jnp.isnan(got[:3]).any())
+    assert not bool(jnp.isnan(got[4:]).any())
+
+
+def test_saturating_i16(rng):
+    xi = jnp.full((4, 8), 32767, jnp.int16)
+    yi = jnp.full((8, 4), 32767, jnp.int16)
+    assert int(ops.mma_ger_saturating(xi, yi, Ger.I16GER2).max()) == \
+        np.iinfo(np.int32).max
+    xn = jnp.full((4, 8), -32768, jnp.int16)
+    assert int(ops.mma_ger_saturating(xn, yi, Ger.I16GER2).min()) == \
+        np.iinfo(np.int32).min
+    # agrees with modulo ref when nothing saturates
+    xs = jnp.asarray(rng.integers(-100, 100, (8, 16)), jnp.int16)
+    ys = jnp.asarray(rng.integers(-100, 100, (16, 8)), jnp.int16)
+    np.testing.assert_array_equal(
+        np.asarray(ops.mma_ger_saturating(xs, ys, Ger.I16GER2)),
+        np.asarray(ref.ger(xs, ys, Ger.I16GER2)))
+
+
+def test_f32_3xbf16_beats_plain_bf16(rng):
+    x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    exact = np.asarray(x) @ np.asarray(y)
+    o3 = np.asarray(ops.mma_dot(x, y, kind=Ger.F32GER_3XBF16,
+                                block=(64, 128, 128)))
+    ob = np.asarray(ref.ger(x.astype(jnp.bfloat16), y.astype(jnp.bfloat16),
+                            Ger.BF16GER2))
+    assert np.abs(o3 - exact).max() < 0.05 * np.abs(ob - exact).max()
+
+
+@pytest.mark.parametrize("n,h,w,c,kh,kw,f", [
+    (2, 10, 24, 3, 3, 3, 8),      # paper's 3x3, 3-channel SCONV
+    (1, 8, 16, 8, 3, 3, 16),
+    (1, 6, 12, 4, 2, 2, 4),
+    (2, 7, 9, 5, 1, 1, 6),        # pointwise
+])
+def test_sconv_matches_oracle(n, h, w, c, kh, kw, f, rng):
+    img = jnp.asarray(rng.normal(size=(n, h, w, c)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(kh, kw, c, f)), jnp.float32)
+    got = KC.mma_conv2d(img, ker, interpret=True)
+    want = ref.conv2d(img, ker)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sconv_matches_lax_conv(rng):
+    """Cross-check the oracle itself against lax.conv."""
+    img = jnp.asarray(rng.normal(size=(2, 10, 24, 3)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        img, ker, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(ref.conv2d(img, ker)),
+                               np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_guard():
+    """The TPU analogue of 'don't spill accumulators' must reject
+    oversized virtual accumulator tiles."""
+    from repro.core import tiling
+    with pytest.raises(ValueError, match="spilling MMA accumulators"):
+        tiling.assert_fits_vmem(tiling.BlockConfig(4096, 4096, 1024),
+                                Ger.BF16GER2)
+
+
+def test_choose_blocks_fits_and_aligned():
+    from repro.core import tiling
+    for (m, n, k) in [(128, 128, 128), (4096, 4096, 4096), (8, 200, 77),
+                      (1000000, 256, 512)]:
+        for kind in [Ger.BF16GER2, Ger.F32GER, Ger.I8GER4, Ger.F64GER]:
+            cfg = tiling.choose_blocks(m, n, k, kind)
+            tiling.assert_fits_vmem(cfg, kind)
+            assert cfg.bn % 128 == 0 and cfg.bk % 128 == 0
