@@ -4,6 +4,11 @@ import time
 
 import jax
 
+# Records accumulated by emit() for the --json output mode of run.py:
+# one {name, us_per_call, derived} dict per emitted row, with the derived
+# "k=v;k=v" string also parsed into a mapping when it is one.
+_RECORDS: list[dict] = []
+
 
 def time_fn(fn, *args, warmup=2, iters=5):
     """Median wall time (us) of a jitted callable."""
@@ -18,5 +23,31 @@ def time_fn(fn, *args, warmup=2, iters=5):
     return times[len(times) // 2] * 1e6
 
 
+def _parse_derived(derived: str):
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            return derived  # free-form: keep the raw string
+        key, val = part.split("=", 1)
+        try:
+            out[key] = int(val)
+        except ValueError:
+            try:
+                out[key] = float(val)
+            except ValueError:
+                out[key] = val
+    return out if out else derived
+
+
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": _parse_derived(derived)})
+
+
+def records() -> list[dict]:
+    return list(_RECORDS)
+
+
+def reset_records() -> None:
+    _RECORDS.clear()

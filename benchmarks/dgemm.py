@@ -3,11 +3,12 @@
 The paper measures flops/cycle on real silicon.  This container is CPU, so
 we report (a) measured CPU wall time of the facility GEMM (XLA path — the
 jit'd production lowering), and (b) the *v5e roofline-projected*
-utilization of the Pallas kernel's tiling: for each N, the kernel's
-arithmetic intensity AI = FLOPs / HBM-bytes(BlockConfig) gives
-projected_flops = min(peak, AI * HBM_bw); utilization = projected / peak —
-the same "% of peak vs problem size" curve as the paper's Figure 11
-(26 flops/cycle = 81% of peak on POWER10-MMA at N >= 512).
+utilization of the Pallas kernel's tiling — for both the ``choose_blocks``
+heuristic and the ``repro.core.autotune`` winner, so the tuned-vs-static
+gap is tracked across PRs.  The projection is the same "% of peak vs
+problem size" curve as the paper's Figure 11 (26 flops/cycle = 81% of peak
+on POWER10-MMA at N >= 512); the autotuned column must never fall below
+the heuristic one (tests/test_autotune.py holds the invariant).
 """
 
 import jax
@@ -15,25 +16,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import tiling
+from repro.core import autotune, tiling
 from repro.core.precision import Ger, policy
 from repro.kernels import ref
-from repro.roofline.analysis import V5E
-
-
-def _traffic_bytes(m, n, k, cfg, pol):
-    """HBM traffic of the accumulator-resident kernel: each X panel is read
-    once per N-tile column, each Y panel once per M-tile row; C written
-    once."""
-    gm, gn, gk = cfg.grid_of(m, n, k)
-    x_reads = gm * gn * gk * cfg.bm * cfg.bk * pol.in_bytes
-    y_reads = gm * gn * gk * cfg.bk * cfg.bn * pol.in_bytes
-    c_write = m * n * pol.acc_bytes
-    return x_reads + y_reads + c_write
+from repro.roofline.analysis import gemm_projected_util
 
 
 def run():
     rng = np.random.default_rng(0)
+    kind = Ger.BF16GER2
+    pol = policy(kind)
     for n in (128, 256, 512, 1024, 2048):
         m, k = n, 128
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
@@ -41,13 +33,15 @@ def run():
         f = jax.jit(lambda a, b: ref.ger(a, b, Ger.F32GER))
         us = time_fn(f, x, y)
         flops = 2 * m * n * k
-        # v5e projection for the bf16 kernel tiling at this shape
-        pol = policy(Ger.BF16GER2)
-        cfg = tiling.choose_blocks(m, n, k, Ger.BF16GER2)
-        traffic = _traffic_bytes(m, n, k, cfg, pol)
-        ai = flops / traffic
-        proj = min(V5E["peak_flops"], ai * V5E["hbm_bw"])
+        # v5e projection for the bf16 kernel tiling at this shape:
+        # static heuristic vs autotuned winner.
+        heur = tiling.choose_blocks(m, n, k, kind)
+        tuned = autotune.autotune(kind, m, n, k)
+        util_heur = gemm_projected_util(m, n, k, heur, pol)
+        util_tuned = gemm_projected_util(m, n, k, tuned, pol)
         emit(f"dgemm_N{n}", us,
              f"cpu_gflops={flops / us / 1e3:.1f};"
-             f"v5e_util={proj / V5E['peak_flops']:.3f};"
-             f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")
+             f"v5e_util_heuristic={util_heur:.3f};"
+             f"v5e_util_autotuned={util_tuned:.3f};"
+             f"block_heuristic={heur.bm}x{heur.bn}x{heur.bk};"
+             f"block_autotuned={tuned.bm}x{tuned.bn}x{tuned.bk}")

@@ -1,8 +1,11 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only dgemm,sconv]
+    PYTHONPATH=src python -m benchmarks.run [--only dgemm,sconv] \
+        [--json [BENCH_foo.json]]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; with ``--json`` also writes
+the same records as machine-readable JSON (default path
+``BENCH_<names>.json``) so the perf trajectory is tracked across PRs.
 
 Paper mapping:
     dgemm        -> Figure 11 (N x 128 @ 128 x N DGEMM sweep)
@@ -14,34 +17,69 @@ Paper mapping:
 """
 
 import argparse
+import json
 import sys
 
-from benchmarks import dgemm, ger_kinds, hpl_like, power_proxy, sconv, \
-    step_bench
-
-ALL = {
-    "dgemm": dgemm.run,
-    "hpl_like": hpl_like.run,
-    "sconv": sconv.run,
-    "power_proxy": power_proxy.run,
-    "ger_kinds": ger_kinds.run,
-    "step_bench": step_bench.run,
-}
+BENCH_NAMES = ("dgemm", "hpl_like", "sconv", "power_proxy", "ger_kinds",
+               "step_bench")
 
 
-def main() -> None:
+def _load_benchmarks():
+    """Import the benchmark modules *before* any CSV output so an import
+    error exits nonzero without emitting a partial header."""
+    from benchmarks import dgemm, ger_kinds, hpl_like, power_proxy, sconv, \
+        step_bench
+    return {
+        "dgemm": dgemm.run,
+        "hpl_like": hpl_like.run,
+        "sconv": sconv.run,
+        "power_proxy": power_proxy.run,
+        "ger_kinds": ger_kinds.run,
+        "step_bench": step_bench.run,
+    }
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(ALL)
+    ap.add_argument("--json", nargs="?", const="auto", default=None,
+                    metavar="BENCH_<name>.json",
+                    help="also write records as JSON (default path "
+                         "BENCH_<names>.json)")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCH_NAMES)
+    unknown = [n for n in names if n not in BENCH_NAMES]
+    if unknown:
+        print(f"unknown benchmarks: {unknown}; have {list(BENCH_NAMES)}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    try:
+        table = _load_benchmarks()
+    except ImportError as e:
+        print(f"benchmark import failed: {e!r}", file=sys.stderr)
+        raise SystemExit(2)
+
+    from benchmarks import common
+
+    common.reset_records()
     print("name,us_per_call,derived")
     failed = []
     for n in names:
         try:
-            ALL[n]()
+            table[n]()
         except Exception as e:  # keep the harness going; report at end
             failed.append((n, repr(e)))
             print(f"{n},nan,ERROR={e!r}", file=sys.stderr)
+
+    if args.json is not None:
+        path = (f"BENCH_{'_'.join(names)}.json" if args.json == "auto"
+                else args.json)
+        blob = {"benchmarks": common.records(),
+                "failed": [{"name": n, "error": err} for n, err in failed]}
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        print(f"wrote {path}", file=sys.stderr)
+
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

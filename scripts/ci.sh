@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a fast dgemm benchmark smoke.
+#
+#   scripts/ci.sh            # full tier-1 + smoke
+#   SKIP_BENCH=1 scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    echo "== dgemm benchmark smoke (<60s) =="
+    timeout 60 python -m benchmarks.run --only dgemm --json BENCH_dgemm.json
+    python - <<'EOF'
+import json
+blob = json.load(open("BENCH_dgemm.json"))
+rows = {r["name"]: r["derived"] for r in blob["benchmarks"]}
+assert not blob["failed"], blob["failed"]
+for n in (128, 256, 512, 1024, 2048):
+    d = rows[f"dgemm_N{n}"]
+    assert d["v5e_util_autotuned"] >= d["v5e_util_heuristic"], (n, d)
+print("BENCH_dgemm.json OK: autotuned >= heuristic on every N")
+EOF
+fi

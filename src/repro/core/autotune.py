@@ -1,0 +1,300 @@
+"""Empirical block-config search for the MMA GEMM pipeline.
+
+``tiling.choose_blocks`` encodes one fixed descent order — the paper's
+static accumulator-allocation rule.  This module closes the gap that the
+compiler-only-layered-reorganization (Kuzma et al.) and "Hello SME!" lines
+of work identified: the best (bm, bn, bk) depends on the problem shape, the
+ger family, and the backend, and is cheapest to find by search.
+
+Pipeline per (ger, M, N, K, epilogue, backend) key:
+
+  1. *Enumerate* every aligned BlockConfig on the ladders in
+     ``tiling.BM/BN/BK_LADDER`` (clamped to the problem) that fits the VMEM
+     budget, then keep the Pareto frontier (no candidate dominated in all
+     three block dims by another fitting candidate) plus the heuristic pick.
+  2. *Rank* by the kernel-level roofline model
+     (``roofline.analysis.gemm_projected_time``) — the prior.
+  3. *Measure* the top-K with real ``pallas_call`` executions when running
+     on TPU.  On CPU the kernel only exists in interpret mode, where wall
+     time says nothing about the MXU, so the traced-cost fallback scores
+     candidates with the same roofline model on a one-tile interpret
+     execution (validating that the config actually lowers and runs).
+  4. *Persist* the winner in a JSON cache that ``ops.mma_dot`` consults on
+     dispatch, so tuned shapes never pay the search again — including in
+     later sessions and on other hosts that share the cache file.
+
+Cache file format (DESIGN.md section 3)::
+
+    {"version": 1,
+     "entries": {"<kind>|<M>x<N>x<K>|<epilogue>|<backend>":
+                 {"block": [bm, bn, bk], "source": "measured"|"traced",
+                  "score": <seconds, projected or measured>}}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision, tiling
+from repro.roofline import analysis as _roofline
+
+DEFAULT_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_CACHE_PATH = pathlib.Path(
+    os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+) / "repro" / "autotune.json"
+CACHE_VERSION = 1
+TOP_K = 4
+
+
+def cache_key(kind: precision.Ger, m: int, n: int, k: int,
+              epilogue_key: str = "none", backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{kind.value}|{m}x{n}x{k}|{epilogue_key}|{backend}"
+
+
+class AutotuneCache:
+    """JSON-backed winner store, loaded lazily, written atomically."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(path) if path is not None \
+            else DEFAULT_CACHE_PATH
+        self._entries: dict[str, dict] | None = None
+        self._lock = threading.Lock()
+
+    def _load(self) -> dict[str, dict]:
+        if self._entries is None:
+            try:
+                blob = json.loads(self.path.read_text())
+                if blob.get("version") == CACHE_VERSION:
+                    self._entries = dict(blob.get("entries", {}))
+                else:
+                    self._entries = {}
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, key: str) -> tiling.BlockConfig | None:
+        ent = self._load().get(key)
+        if not ent:
+            return None
+        return tiling.BlockConfig(*ent["block"])
+
+    def put(self, key: str, cfg: tiling.BlockConfig, *, source: str,
+            score: float) -> None:
+        with self._lock:
+            entries = self._load()
+            entries[key] = {"block": [cfg.bm, cfg.bn, cfg.bk],
+                            "source": source, "score": score}
+            try:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = self.path.with_suffix(".tmp")
+                tmp.write_text(json.dumps(
+                    {"version": CACHE_VERSION, "entries": entries},
+                    indent=1, sort_keys=True))
+                tmp.replace(self.path)
+            except OSError:
+                pass  # read-only FS: keep the in-memory winner
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+_DEFAULT_CACHE: AutotuneCache | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_cache() -> AutotuneCache:
+    global _DEFAULT_CACHE
+    with _DEFAULT_LOCK:
+        if _DEFAULT_CACHE is None:
+            _DEFAULT_CACHE = AutotuneCache(
+                os.environ.get(DEFAULT_CACHE_ENV) or None)
+        return _DEFAULT_CACHE
+
+
+def lookup(kind: precision.Ger, m: int, n: int, k: int,
+           epilogue_key: str = "none", backend: str | None = None,
+           cache: AutotuneCache | None = None) -> tiling.BlockConfig | None:
+    """Cache-only consult (what ``ops.mma_dot`` does on dispatch) — never
+    triggers a search; returns None on miss so dispatch falls back to the
+    ``choose_blocks`` heuristic."""
+    cache = cache if cache is not None else default_cache()
+    cfg = cache.get(cache_key(kind, m, n, k, epilogue_key, backend))
+    if cfg is not None:
+        try:
+            tiling.assert_fits_vmem(cfg, kind)
+        except ValueError:
+            return None  # stale entry from a different budget model
+    return cfg
+
+
+# ----------------------------------------------------------------------
+# Candidate enumeration: the VMEM-budget frontier
+# ----------------------------------------------------------------------
+
+def candidate_blocks(m: int, n: int, k: int, kind: precision.Ger,
+                     vmem_budget: int = tiling.VMEM_BUDGET,
+                     ) -> list[tiling.BlockConfig]:
+    """Every distinct aligned config on the ladders that fits the budget.
+
+    This IS the region around the VMEM-budget frontier: the ladders are
+    coarse (powers of two from the MXU edge), so the fitting set is small
+    (<= ~85) and the roofline prior can rank all of it; only *measurement*
+    is bounded to the top-K.  The heuristic ``choose_blocks`` pick is
+    always included, which guarantees the tuned result is never ranked
+    worse than the heuristic under the shared model.
+
+    Note a config larger in every block dim is not automatically better:
+    fringe padding is charged by the prior (pad(100, 64) = 128 rows but
+    pad(100, 8) = 104), so small tiles legitimately win small problems.
+    """
+    pol = precision.policy(kind)
+    m_a = tiling._round_up(max(m, 8), 8)
+    n_a = tiling._round_up(max(n, tiling.MXU), tiling.MXU)
+    k_a = tiling._round_up(max(k, tiling.MXU), tiling.MXU)
+    seen: set[tuple[int, int, int]] = set()
+    fitting: list[tiling.BlockConfig] = []
+    for bm in tiling.BM_LADDER:
+        for bn in tiling.BN_LADDER:
+            for bk in tiling.BK_LADDER:
+                cfg = tiling.BlockConfig(min(bm, m_a), min(bn, n_a),
+                                         min(bk, k_a))
+                tup = (cfg.bm, cfg.bn, cfg.bk)
+                if tup in seen:
+                    continue
+                seen.add(tup)
+                if cfg.vmem_bytes(pol) <= vmem_budget:
+                    fitting.append(cfg)
+    heur = tiling.choose_blocks(m, n, k, kind, vmem_budget)
+    if (heur.bm, heur.bn, heur.bk) not in seen:
+        fitting.append(heur)
+    return fitting
+
+
+def predicted_time(m: int, n: int, k: int, cfg: tiling.BlockConfig,
+                   kind: precision.Ger) -> float:
+    """The ranking prior: kernel-level roofline seconds on the v5e model."""
+    pol = precision.policy(kind)
+    return _roofline.gemm_projected_time(m, n, k, cfg, pol)
+
+
+# ----------------------------------------------------------------------
+# Measurement
+# ----------------------------------------------------------------------
+
+def _operands(m: int, n: int, k: int, kind: precision.Ger):
+    pol = precision.policy(kind)
+    rng = np.random.default_rng(0)
+    if pol.packed_int4:
+        x = jnp.asarray(rng.integers(-128, 128, (m, k // 2)), jnp.int8)
+        y = jnp.asarray(rng.integers(-128, 128, (k // 2, n)), jnp.int8)
+    elif jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        x = jnp.asarray(rng.integers(-100, 100, (m, k)), pol.x_dtype)
+        hi = 256 if jnp.dtype(pol.y_dtype) == jnp.uint8 else 100
+        lo = 0 if jnp.dtype(pol.y_dtype) == jnp.uint8 else -100
+        y = jnp.asarray(rng.integers(lo, hi, (k, n)), pol.y_dtype)
+    else:
+        x = jnp.asarray(rng.normal(size=(m, k)), pol.x_dtype)
+        y = jnp.asarray(rng.normal(size=(k, n)), pol.y_dtype)
+    return x, y
+
+
+def _measure_wall_us(m, n, k, kind, cfg, *, interpret, warmup=1, iters=3):
+    """Median wall time (us) of the real pallas_call at this config."""
+    import time
+
+    from repro.kernels import mma_gemm as _gemm
+    x, y = _operands(m, n, k, kind)
+
+    # jit the call so timed iterations measure the kernel, not per-call
+    # Python tracing/dispatch of the pallas_call.
+    @jax.jit
+    def run_jit(x, y):
+        return _gemm.mma_gemm(x, y, kind=kind,
+                              block=(cfg.bm, cfg.bn, cfg.bk),
+                              interpret=interpret)
+
+    def run():
+        return run_jit(x, y)
+
+    jax.block_until_ready(run())
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _validate_interpret(m, n, k, kind, cfg) -> bool:
+    """One-tile interpret-mode execution: does this config lower and run?
+
+    Clamped to a single grid step so CPU validation stays cheap even for
+    production shapes.
+    """
+    from repro.kernels import mma_gemm as _gemm
+    mv, nv, kv = min(m, cfg.bm), min(n, cfg.bn), min(k, cfg.bk)
+    try:
+        x, y = _operands(mv, nv, kv, kind)
+        out = _gemm.mma_gemm(x, y, kind=kind,
+                             block=(cfg.bm, cfg.bn, cfg.bk), interpret=True)
+        return bool(jnp.isfinite(
+            out.astype(jnp.float32)).all()) if not jnp.issubdtype(
+                out.dtype, jnp.integer) else True
+    except Exception:
+        return False
+
+
+def autotune(kind: precision.Ger, m: int, n: int, k: int, *,
+             epilogue_key: str = "none", backend: str | None = None,
+             cache: AutotuneCache | None = None, top_k: int = TOP_K,
+             force: bool = False) -> tiling.BlockConfig:
+    """Find (or recall) the best BlockConfig for one GEMM shape.
+
+    Returns the cached winner when present.  Otherwise ranks the VMEM
+    frontier by the roofline prior; on TPU the top-K are timed with real
+    pallas_call executions, on CPU the prior IS the score (traced-cost
+    fallback) and the winner is validated with a one-tile interpret run.
+    """
+    backend = backend or jax.default_backend()
+    cache = cache if cache is not None else default_cache()
+    key = cache_key(kind, m, n, k, epilogue_key, backend)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+
+    cands = candidate_blocks(m, n, k, kind)
+    ranked = sorted(cands, key=lambda c: predicted_time(m, n, k, c, kind))
+
+    if backend == "tpu":
+        scored = [(c, _measure_wall_us(m, n, k, kind, c, interpret=False))
+                  for c in ranked[:top_k]]
+        best, score = min(scored, key=lambda cs: cs[1])
+        source = "measured"
+    else:
+        # Interpret-mode traced-cost fallback: the prior ranks, a clamped
+        # interpret execution weeds out configs that fail to lower.
+        best, score = None, float("inf")
+        for c in ranked[:top_k]:
+            if _validate_interpret(m, n, k, kind, c):
+                best, score = c, predicted_time(m, n, k, c, kind)
+                break
+        if best is None:  # every candidate failed: fall back to heuristic
+            best = tiling.choose_blocks(m, n, k, kind)
+            score = predicted_time(m, n, k, best, kind)
+        source = "traced"
+
+    tiling.assert_fits_vmem(best, kind)
+    cache.put(key, best, source=source, score=float(score))
+    return best

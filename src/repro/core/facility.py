@@ -103,6 +103,61 @@ def fdot(x: jnp.ndarray, w: jnp.ndarray, *, ger: Ger | None = None,
     return out.astype(out_dtype)
 
 
+def fdot_fused(x: jnp.ndarray, w: jnp.ndarray, *,
+               bias: jnp.ndarray | None = None,
+               activation: str | None = None,
+               residual: jnp.ndarray | None = None,
+               ger: Ger | None = None, out_dtype=None) -> jnp.ndarray:
+    """``fdot`` with a fused epilogue: activation/bias/residual applied to
+    the resident accumulator before the out_dtype cast (epilogue contract,
+    DESIGN.md section 4).
+
+    Pallas path: fused into the kernel's deprime store.  XLA path: the
+    same ``epilogue.apply`` on the ``preferred_element_type`` accumulator,
+    which XLA fuses into the matmul epilogue on TPU — either way the
+    activation computes in acc dtype (fp32), not in the cast-down
+    activation dtype, so fused beats unfused numerically as well.
+    """
+    from repro.kernels import epilogue as _epilogue  # local: avoids cycle
+
+    cfg = current()
+    ger = ger or cfg.ger
+    out_dtype = out_dtype or cfg.out_dtype
+    pol = precision.policy(ger)
+    ep = _epilogue.make(bias=bias, activation=activation, residual=residual)
+    if ep.is_identity:
+        return fdot(x, w, ger=ger, out_dtype=out_dtype)
+
+    lead = x.shape[:-1]
+    res2d = None
+    if residual is not None:
+        res2d = residual.reshape(-1, residual.shape[-1])
+
+    if cfg.use_pallas and x.ndim >= 2 and w.ndim == 2:
+        from repro.kernels import ops
+        out = ops.mma_dot_fused(
+            x.reshape(-1, x.shape[-1]), w, kind=ger, epilogue=ep,
+            bias=bias, residual=res2d, interpret=cfg.interpret,
+            out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[-1])
+
+    if ger == Ger.F32GER_3XBF16:
+        from repro.kernels import ops
+        out = ops.mma_dot_fused(
+            x.reshape(-1, x.shape[-1]), w, kind=ger, epilogue=ep,
+            bias=bias, residual=res2d, use_pallas=False,
+            out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[-1])
+
+    xin = _cast_in(x, pol, "x")
+    win = _cast_in(w, pol, "y")
+    out = lax.dot_general(
+        xin, win, (((xin.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pol.acc_dtype)
+    out = _epilogue.apply(out, ep, bias=bias, residual=residual)
+    return out.astype(out_dtype)
+
+
 def feinsum(spec: str, a: jnp.ndarray, b: jnp.ndarray, *,
             ger: Ger | None = None, out_dtype=None) -> jnp.ndarray:
     """Facility-routed einsum for contractions that are not plain fdot

@@ -27,6 +27,13 @@ VMEM_BYTES = 16 * 1024 * 1024
 VMEM_BUDGET = int(VMEM_BYTES * 0.75)
 MXU = 128  # systolic array edge: alignment target for bm/bn/bk
 
+# Aligned block-size ladders.  ``choose_blocks`` descends them in one fixed
+# order; ``repro.core.autotune`` enumerates their cross product around the
+# VMEM frontier and ranks empirically instead.
+BM_LADDER = (512, 256, 128, 64, 32, 16, 8)
+BN_LADDER = (512, 256, 128)
+BK_LADDER = (1024, 512, 256, 128)
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
@@ -71,13 +78,13 @@ def choose_blocks(m: int, n: int, k: int, ger: precision.Ger,
 
     # Start from the preferred production tile and shrink until it fits both
     # the problem and the VMEM budget.
-    for bm in (512, 256, 128, 64, 32, 16, 8):
+    for bm in BM_LADDER:
         if bm > m_a and bm > 8:
             continue
-        for bn in (512, 256, 128):
+        for bn in BN_LADDER:
             if bn > n_a and bn > MXU:
                 continue
-            for bk in (1024, 512, 256, 128):
+            for bk in BK_LADDER:
                 if bk > k_a and bk > MXU:
                     continue
                 cfg = BlockConfig(min(bm, _round_up(m_a, 8)),

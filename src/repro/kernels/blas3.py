@@ -20,7 +20,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import Ger
-from repro.kernels import ref
+from repro.kernels import ops
+
+
+def _ger(x, y, kind, acc=None, neg_product=False):
+    """Accumulate-form ger through the ops dispatch layer
+    (ops.mma_dot_fused carries the pp/np forms), so trsm/DFT panel updates
+    share its validation and accumulate-form semantics.  The XLA path is
+    used (use_pallas=False): these panels are small and irregular, so they
+    are not autotuned or kernel-lowered."""
+    return ops.mma_dot_fused(x, y, acc, kind=kind, neg_product=neg_product,
+                             use_pallas=False)
 
 
 def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
@@ -39,8 +49,8 @@ def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
         rhs = b[lo:hi]
         if i > 0:
             # rhs <- rhs - L[i, :i] @ X[:i]   (xvf32gernp chaining)
-            rhs = ref.ger(l[lo:hi, :lo], x[:lo], Ger.F32GER,
-                          acc=rhs, neg_product=True)
+            rhs = _ger(l[lo:hi, :lo], x[:lo], Ger.F32GER,
+                       acc=rhs, neg_product=True)
         xi = jax.scipy.linalg.solve_triangular(
             l[lo:hi, lo:hi], rhs, lower=True,
             unit_diagonal=unit_diagonal)
@@ -50,10 +60,10 @@ def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
 
 def complex_gemm(ar, ai, br, bi, kind: Ger = Ger.F32GER):
     """(ar + i·ai) @ (br + i·bi) via four real accumulate-form gers."""
-    re = ref.ger(ar, br, kind)
-    re = ref.ger(ai, bi, kind, acc=re, neg_product=True)     # np form
-    im = ref.ger(ar, bi, kind)
-    im = ref.ger(ai, br, kind, acc=im)                       # pp form
+    re = _ger(ar, br, kind)
+    re = _ger(ai, bi, kind, acc=re, neg_product=True)        # np form
+    im = _ger(ar, bi, kind)
+    im = _ger(ai, br, kind, acc=im)                          # pp form
     return re, im
 
 

@@ -1,0 +1,117 @@
+"""Fused GEMM epilogues: post-processing applied inside the deprime store.
+
+The paper's accumulator residency argument (sections III-V) is about never
+round-tripping the output through the memory hierarchy during compute.  The
+same argument extends one step past the GEMM: if the next op is a bias add,
+an activation, or a residual add, folding it into the ``ki == k_steps - 1``
+store means the accumulator tile goes VMEM -> epilogue -> HBM once, instead
+of HBM -> VMEM -> epilogue -> HBM a second time.  This is the
+post-processing fusion that Kuzma et al. and "Hello SME!" attach to their
+empirically-tuned microkernels.
+
+Contract (DESIGN.md section 4):
+
+  * The epilogue is applied to the *accumulator-dtype* tile, after the
+    alpha scale, before the out_dtype cast:
+        store(cast(residual + act(bias + alpha * acc)))
+  * ``apply`` is the single implementation used by the Pallas kernels
+    (on the VMEM-resident tile) and the XLA/reference path (on the full
+    matrix), so the two paths are bit-identical at fp32.
+  * bias broadcasts along rows: shape (N,) outside the kernel, a (1, bn)
+    block inside.  residual has the output shape.
+  * gelu/silu are float-only; integer accumulators admit bias/relu/residual
+    (all exact in int32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+def _gelu_exact(v):
+    # Exact (erf) gelu, not the tanh approximation: the tanh form's
+    # x + 0.044715*x^3 term FMA-contracts differently inside a fused kernel
+    # than in an eager reference, breaking the bit-for-bit contract below.
+    half = jnp.asarray(0.5, v.dtype)
+    inv_sqrt2 = jnp.asarray(0.7071067811865476, v.dtype)
+    return v * (half * (1.0 + jax.lax.erf(v * inv_sqrt2)))
+
+
+ACTIVATIONS = {
+    "relu": lambda v: jnp.maximum(v, jnp.zeros_like(v)),
+    "gelu": _gelu_exact,
+    "silu": jax.nn.silu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Static description of the fused post-processing (jit-hashable).
+
+    The actual bias/residual operands travel separately as kernel inputs;
+    this object only records *which* terms are present, so it can key the
+    autotune cache and be a static jit argument.
+    """
+
+    bias: bool = False
+    activation: str | None = None   # relu | gelu | silu
+    residual: bool = False
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.activation!r}; "
+                f"have {sorted(ACTIVATIONS)}")
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.activation or self.residual)
+
+    @property
+    def key(self) -> str:
+        """Cache-key fragment, e.g. 'bias+gelu+residual' or 'none'."""
+        parts = ([p for p, on in (("bias", self.bias),
+                                  (self.activation, self.activation),
+                                  ("residual", self.residual)) if on])
+        return "+".join(parts) if parts else "none"
+
+    def validate(self, acc_dtype, bias=None, residual=None) -> None:
+        """Check operand presence and int-accumulator restrictions."""
+        if self.bias != (bias is not None):
+            raise ValueError(f"epilogue.bias={self.bias} but "
+                             f"bias operand {'missing' if self.bias else 'given'}")
+        if self.residual != (residual is not None):
+            raise ValueError(f"epilogue.residual={self.residual} but "
+                             f"residual operand "
+                             f"{'missing' if self.residual else 'given'}")
+        if (self.activation in ("gelu", "silu")
+                and jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer)):
+            raise ValueError(
+                f"{self.activation} needs a float accumulator, got {acc_dtype}")
+
+
+def apply(out: jnp.ndarray, ep: Epilogue | None,
+          bias: jnp.ndarray | None = None,
+          residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Apply the epilogue terms to an accumulator-dtype tile or matrix.
+
+    Shared by the Pallas deprime stores and the XLA path — keep it free of
+    anything that does not trace inside a kernel.
+    """
+    if ep is None or ep.is_identity:
+        return out
+    if ep.bias:
+        out = out + bias.astype(out.dtype)
+    if ep.activation:
+        out = ACTIVATIONS[ep.activation](out)
+    if ep.residual:
+        out = out + residual.astype(out.dtype)
+    return out
+
+
+def make(bias=None, activation: str | None = None, residual=None) -> Epilogue:
+    """Build the static Epilogue matching the operands actually supplied."""
+    return Epilogue(bias=bias is not None, activation=activation,
+                    residual=residual is not None)

@@ -26,12 +26,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import epilogue as _epilogue
+
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
-                  k_steps: int, bq: int, bk: int, causal: bool,
-                  sm_scale: float):
+def _flash_kernel(*refs, k_steps: int, bq: int, bk: int, causal: bool,
+                  sm_scale: float, ep: _epilogue.Epilogue | None):
+    refs = list(refs)
+    q_ref, k_ref, v_ref = refs[:3]
+    pos = 3
+    bias_ref = refs[pos] if ep and ep.bias else None
+    pos += bool(ep and ep.bias)
+    res_ref = refs[pos] if ep and ep.residual else None
+    pos += bool(ep and ep.residual)
+    out_ref, acc_ref, m_ref, l_ref = refs[pos:]
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -68,13 +77,28 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
     def _store():
         l = l_ref[...]
         l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows
-        out_ref[0] = (acc_ref[...] / l).astype(out_ref.dtype)
+        out = acc_ref[...] / l
+        if ep is not None:
+            out = _epilogue.apply(
+                out, ep,
+                bias=bias_ref[...] if bias_ref is not None else None,
+                residual=res_ref[0] if res_ref is not None else None)
+        out_ref[0] = out.astype(out_ref.dtype)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False):
-    """q, k, v: (BH, S, D) -> (BH, S, D).  S must divide by the blocks."""
+                    block_k: int = 128,
+                    ep: _epilogue.Epilogue | None = None,
+                    bias: jnp.ndarray | None = None,
+                    residual: jnp.ndarray | None = None,
+                    interpret: bool = False):
+    """q, k, v: (BH, S, D) -> (BH, S, D).  S must divide by the blocks.
+
+    ``ep`` fuses bias (D,) / activation / residual (BH, S, D) into the
+    normalized deprime store (epilogue.py contract), e.g. a residual hookup
+    for decoder blocks without re-reading O from HBM.
+    """
     bh, sq, d = q.shape
     _, sk, _ = k.shape
     bq = min(block_q, sq)
@@ -83,19 +107,33 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         raise ValueError(f"S ({sq},{sk}) must divide blocks ({bq},{bk})")
     sm_scale = d ** -0.5
     grid = (bh, sq // bq, sk // bk)
+    ep = ep if ep is not None and not ep.is_identity else None
+    if ep is not None:
+        ep.validate(jnp.float32, bias=bias, residual=residual)
+    elif bias is not None or residual is not None:
+        raise ValueError("bias/residual operands need an Epilogue")
 
     kernel = functools.partial(
         _flash_kernel, k_steps=grid[2], bq=bq, bk=bk, causal=causal,
-        sm_scale=sm_scale)
+        sm_scale=sm_scale, ep=ep)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+    ]
+    inputs = [q, k, v]
+    if ep is not None and ep.bias:
+        in_specs.append(pl.BlockSpec((1, d), lambda b, i, j: (0, 0)))
+        inputs.append(bias.reshape(1, d))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)))
+        inputs.append(residual)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
@@ -104,7 +142,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*inputs)
 
 
 def ref_attention(q, k, v, *, causal: bool = True):

@@ -10,9 +10,12 @@ the filter bank Hbar plays the role of the left GEMM operand.
 Pallas mapping:
   grid = (N*OH, F/bf, KH); the KH axis is the rank-accumulation loop, so the
   (OW, bf) output tile is a resident VMEM accumulator across it, exactly
-  like the GEMM kernel's k-loop.  Inside one step, the KW shifts become KW
-  MXU dots of (OW, C) x (C, bf) — the paper's 27 ger updates for the
-  3x3x3-channel case.
+  like the GEMM kernel's k-loop.  Inside one step, the KW shifts are
+  gathered from the resident row into one (OW, KW*C) panel and folded with
+  the whole (KW*C, bf) filter slice in a single MXU dot — the paper's 27
+  ger updates for the 3x3x3-channel case, batched into one rank-(KW*C)
+  update.  When KW*C is not lane-aligned for the MXU (and we are not in
+  interpret mode), the kernel falls back to KW separate rank-C dots.
 """
 
 from __future__ import annotations
@@ -24,9 +27,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import epilogue as _epilogue
 
-def _sconv_kernel(x_ref, w_ref, out_ref, acc_ref, *, kh_total: int,
-                  kw_total: int, ow: int, acc_dtype):
+
+def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, acc_dtype,
+                  fuse_kw: bool, ep: _epilogue.Epilogue | None):
+    refs = list(refs)
+    x_ref, w_ref = refs[:2]
+    pos = 2
+    bias_ref = refs[pos] if ep and ep.bias else None
+    pos += bool(ep and ep.bias)
+    res_ref = refs[pos] if ep and ep.residual else None
+    pos += bool(ep and ep.residual)
+    out_ref, acc_ref = refs[pos:]
     kh = pl.program_id(2)
 
     @pl.when(kh == 0)
@@ -34,24 +47,48 @@ def _sconv_kernel(x_ref, w_ref, out_ref, acc_ref, *, kh_total: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     row = x_ref[0, 0]                       # (W, C) image row oh + kh
-    for kw in range(kw_total):              # shifted displacements
-        xs = row[kw:kw + ow, :]             # (OW, C) static slice
-        wk = w_ref[0, kw]                   # (C, bf)
+    c = row.shape[1]
+    if fuse_kw:
+        # Hoisted form: one (OW, KW*C) panel of shifted row reads against
+        # the full (KW*C, bf) filter slice — a single rank-(KW*C) update
+        # instead of KW rank-C updates.  Column order is kw-major to match
+        # w_ref.reshape's (kw, c) flattening.
+        patch = jnp.concatenate(
+            [row[kw:kw + ow, :] for kw in range(kw_total)], axis=1)
+        wk = w_ref[0].reshape(kw_total * c, -1)         # (KW*C, bf)
         acc_ref[...] += jax.lax.dot_general(
-            xs, wk, (((1,), (0,)), ((), ())),
+            patch, wk, (((1,), (0,)), ((), ())),
             preferred_element_type=acc_dtype)
+    else:
+        for kw in range(kw_total):          # shifted displacements
+            xs = row[kw:kw + ow, :]         # (OW, C) static slice
+            wk = w_ref[0, kw]               # (C, bf)
+            acc_ref[...] += jax.lax.dot_general(
+                xs, wk, (((1,), (0,)), ((), ())),
+                preferred_element_type=acc_dtype)
 
     @pl.when(kh == kh_total - 1)
     def _store():
-        out_ref[0, 0] = acc_ref[...].astype(out_ref.dtype)
+        out = acc_ref[...]
+        if ep is not None:
+            out = _epilogue.apply(
+                out, ep,
+                bias=bias_ref[...] if bias_ref is not None else None,
+                residual=res_ref[0, 0] if res_ref is not None else None)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
 def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
                bf: int | None = None, out_dtype=jnp.float32,
+               ep: _epilogue.Epilogue | None = None,
+               bias: jnp.ndarray | None = None,
+               residual: jnp.ndarray | None = None,
                interpret: bool = False) -> jnp.ndarray:
     """VALID 2-D convolution, stride 1 (paper's h * A).
 
     image: (N, H, W, C); kernels: (KH, KW, C, F) -> (N, OH, OW, F).
+    ``ep`` fuses bias (F,) / activation / residual (N, OH, OW, F) into the
+    final-KH deprime store (epilogue.py contract).
     """
     n, h, w, c = image.shape
     kh, kw, c2, f = kernels.shape
@@ -60,24 +97,43 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
     oh, ow = h - kh + 1, w - kw + 1
     bf = bf or min(f, 128)
     acc_dtype = jnp.float32
+    ep = ep if ep is not None and not ep.is_identity else None
+    if ep is not None:
+        ep.validate(acc_dtype, bias=bias, residual=residual)
+    elif bias is not None or residual is not None:
+        raise ValueError("bias/residual operands need an Epilogue")
+    # Single-dot form needs the concatenated panel to be MXU-liftable;
+    # interpret mode (CPU) always is, compiled mode wants lane alignment.
+    fuse_kw = kw > 1 and (interpret or (kw * c) % 128 == 0)
 
     grid = (n * oh, -(-f // bf), kh)
     kernel = functools.partial(
-        _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, acc_dtype=acc_dtype)
+        _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, acc_dtype=acc_dtype,
+        fuse_kw=fuse_kw, ep=ep)
+
+    in_specs = [
+        # One full image row (oh + kh), resident once per (row, kh).
+        pl.BlockSpec((1, 1, w, c),
+                     lambda i, j, k, oh=oh: (i // oh, i % oh + k, 0, 0)),
+        # One kh-slice of the filter bank: (1, KW, C, bf).
+        pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j)),
+    ]
+    inputs = [image, kernels]
+    if ep is not None and ep.bias:
+        in_specs.append(pl.BlockSpec((1, bf), lambda i, j, k: (0, j)))
+        inputs.append(bias.reshape(1, f))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, ow, bf), lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)))
+        inputs.append(residual)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            # One full image row (oh + kh), resident once per (row, kh).
-            pl.BlockSpec((1, 1, w, c),
-                         lambda i, j, k, oh=oh: (i // oh, i % oh + k, 0, 0)),
-            # One kh-slice of the filter bank: (1, KW, C, bf).
-            pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, ow, bf),
                                lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, f), out_dtype),
         scratch_shapes=[pltpu.VMEM((ow, bf), acc_dtype)],
         interpret=interpret,
-    )(image, kernels)
+    )(*inputs)

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import precision, tiling
+from repro.kernels import epilogue as _epilogue
 
 
 def _unpack_int4(v: jnp.ndarray, axis: int) -> jnp.ndarray:
@@ -43,12 +44,20 @@ def _unpack_int4(v: jnp.ndarray, axis: int) -> jnp.ndarray:
 
 
 def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
-                 has_c, alpha, beta):
+                 has_c, alpha, beta, ep: _epilogue.Epilogue | None = None):
+    ep = ep if ep is not None and not ep.is_identity else None
+
     def kernel(*refs):
-        if has_c:
-            x_ref, y_ref, c_ref, out_ref, acc_ref = refs
-        else:
-            x_ref, y_ref, out_ref, acc_ref = refs
+        refs = list(refs)
+        x_ref, y_ref = refs[:2]
+        pos = 2
+        c_ref = refs[pos] if has_c else None
+        pos += has_c
+        bias_ref = refs[pos] if ep and ep.bias else None
+        pos += bool(ep and ep.bias)
+        res_ref = refs[pos] if ep and ep.residual else None
+        pos += bool(ep and ep.residual)
+        out_ref, acc_ref = refs[pos:]
         ki = pl.program_id(2)
 
         # ---- prime the accumulator (xxsetaccz / accumulate forms) ----
@@ -84,12 +93,18 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                                    preferred_element_type=pol.acc_dtype)
         acc_ref[...] += -prod if neg_product else prod
 
-        # ---- depriming: single HBM store of the virtual accumulator ----
+        # ---- depriming: single HBM store of the virtual accumulator,
+        # with the epilogue fused so the tile never revisits HBM ----
         @pl.when(ki == k_steps - 1)
         def _store():
             out = acc_ref[...]
             if alpha != 1.0:
                 out = out * jnp.asarray(alpha, pol.acc_dtype)
+            if ep is not None:
+                out = _epilogue.apply(
+                    out, ep,
+                    bias=bias_ref[...] if bias_ref is not None else None,
+                    residual=res_ref[...] if res_ref is not None else None)
             out_ref[...] = out.astype(out_ref.dtype)
 
     return kernel
@@ -101,11 +116,18 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
              block: tuple[int, int, int] | None = None,
              neg_product: bool = False, neg_acc: bool = False,
              alpha: float = 1.0, beta: float = 1.0,
+             ep: _epilogue.Epilogue | None = None,
+             bias: jnp.ndarray | None = None,
+             residual: jnp.ndarray | None = None,
              out_dtype=None, interpret: bool = False) -> jnp.ndarray:
     """C <- alpha * [-](X @ Y)  [+ beta * (+/-)C]  with resident accumulator.
 
     x: (M, K); y: (K, N); c: optional (M, N) accumulator input (the
     pp/np/pn/nn accumulate forms).  int4 kind: K axis packed 2-per-byte.
+
+    ``ep`` fuses bias (N,), activation, and residual (M, N) into the final
+    k-step store (epilogue.py contract): the accumulator tile leaves VMEM
+    exactly once, already post-processed.
     """
     pol = precision.policy(kind)
     if kind == precision.Ger.F32GER_3XBF16:
@@ -117,6 +139,11 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
     pack = 2 if pol.packed_int4 else 1
     k = k_packed * pack
     out_dtype = out_dtype or pol.acc_dtype
+    ep = ep if ep is not None and not ep.is_identity else None
+    if ep is not None:
+        ep.validate(pol.acc_dtype, bias=bias, residual=residual)
+    elif bias is not None or residual is not None:
+        raise ValueError("bias/residual operands need an Epilogue")
 
     cfg = (tiling.choose_blocks(m, n, k, kind) if block is None
            else tiling.BlockConfig(*block))
@@ -134,11 +161,18 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
     if c is not None:
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
         inputs.append(c)
+    if ep is not None and ep.bias:
+        # Row-broadcast vector as a (1, bn) block of a (1, N) operand.
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        inputs.append(bias.reshape(1, n))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        inputs.append(residual)
 
     kernel = _make_kernel(
         pol=pol, k_steps=grid[2], k_size=k, bk_logical=bk_logical,
         neg_product=neg_product, neg_acc=neg_acc, has_c=c is not None,
-        alpha=alpha, beta=beta)
+        alpha=alpha, beta=beta, ep=ep)
 
     return pl.pallas_call(
         kernel,

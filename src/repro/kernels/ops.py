@@ -23,12 +23,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import autotune as _autotune
 from repro.core import precision
+from repro.kernels import epilogue as _epilogue
 from repro.kernels import mma_gemm as _gemm
 from repro.kernels import mma_conv as _conv
 from repro.kernels import ref as _ref
 
 Ger = precision.Ger
+Epilogue = _epilogue.Epilogue
 
 
 def _split_bf16(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -37,17 +40,49 @@ def _split_bf16(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return hi, lo
 
 
+def _resolve_block(x, y, kind: Ger,
+                   block: tuple[int, int, int] | None,
+                   epilogue_key: str = "none",
+                   use_pallas: bool = True):
+    """Dispatch-time autotune-cache consult (outside jit, so later tuning
+    is picked up on the next call instead of being frozen into a trace).
+
+    Explicit ``block`` wins; then a cached autotune winner for this
+    (kind, M, N, K, epilogue, backend); else None -> ``choose_blocks``.
+    """
+    if block is not None or not use_pallas:
+        return block
+    pack = 2 if precision.policy(kind).packed_int4 else 1
+    m, k = x.shape[0], x.shape[1] * pack
+    n = y.shape[1]
+    cfg = _autotune.lookup(kind, m, n, k, epilogue_key)
+    return (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else None
+
+
 @functools.partial(jax.jit, static_argnames=(
     "kind", "block", "use_pallas", "interpret", "out_dtype"))
+def _mma_dot_impl(x, y, c, *, kind, block, use_pallas, interpret, out_dtype):
+    pol = precision.policy(kind)
+    x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
+    y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
+    if use_pallas:
+        return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
+                              out_dtype=out_dtype, interpret=interpret)
+    out = _ref.ger(x, y, kind, acc=c)
+    return out.astype(out_dtype) if out_dtype else out
+
+
 def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
             c: jnp.ndarray | None = None, *,
             kind: Ger = Ger.BF16GER2,
             block: tuple[int, int, int] | None = None,
             use_pallas: bool = True, interpret: bool = True,
             out_dtype=None) -> jnp.ndarray:
-    """``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N)."""
-    pol = precision.policy(kind)
+    """``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N).
 
+    When ``block`` is None the autotune cache is consulted first
+    (repro.core.autotune); the ``choose_blocks`` heuristic is the fallback.
+    """
     if kind == Ger.F32GER_3XBF16:
         # Beyond-paper: fp32 on the MXU as three bf16 rank-k passes
         # (hi*hi + hi*lo + lo*hi); the fp32 accumulator tile is resident
@@ -63,13 +98,96 @@ def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
                       use_pallas=use_pallas, interpret=interpret)
         return out.astype(out_dtype or jnp.float32)
 
+    block = _resolve_block(x, y, kind, block, use_pallas=use_pallas)
+    return _mma_dot_impl(x, y, c, kind=kind, block=block,
+                         use_pallas=use_pallas, interpret=interpret,
+                         out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "epilogue", "block", "use_pallas", "interpret", "out_dtype",
+    "neg_product", "neg_acc", "alpha", "beta"))
+def _mma_dot_fused_impl(x, y, c, bias, residual, *, kind, epilogue, block,
+                        use_pallas, interpret, out_dtype, neg_product,
+                        neg_acc, alpha, beta):
+    pol = precision.policy(kind)
     x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
     y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
     if use_pallas:
         return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
+                              neg_product=neg_product, neg_acc=neg_acc,
+                              alpha=alpha, beta=beta,
+                              ep=epilogue, bias=bias, residual=residual,
                               out_dtype=out_dtype, interpret=interpret)
-    out = _ref.ger(x, y, kind, acc=c)
+    # XLA path: identical architected semantics, same epilogue helper on
+    # the accumulator-dtype matrix (bit-identical at fp32 under jit).
+    # beta scales in acc dtype, matching the kernel's prime step order
+    # (cast first, then scale) so bf16 c inputs round identically.
+    acc_in = None
+    if c is not None:
+        acc_in = c.astype(pol.acc_dtype)
+        if beta != 1.0:
+            acc_in = acc_in * jnp.asarray(beta, pol.acc_dtype)
+    out = _ref.ger(x, y, kind, acc=acc_in, neg_product=neg_product,
+                   neg_acc=neg_acc)
+    if alpha != 1.0:
+        out = out * jnp.asarray(alpha, out.dtype)
+    out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
     return out.astype(out_dtype) if out_dtype else out
+
+
+def mma_dot_fused(x: jnp.ndarray, y: jnp.ndarray,
+                  c: jnp.ndarray | None = None, *,
+                  kind: Ger = Ger.BF16GER2,
+                  epilogue: Epilogue | None = None,
+                  bias: jnp.ndarray | None = None,
+                  residual: jnp.ndarray | None = None,
+                  block: tuple[int, int, int] | None = None,
+                  use_pallas: bool = True, interpret: bool = True,
+                  neg_product: bool = False, neg_acc: bool = False,
+                  alpha: float = 1.0, beta: float = 1.0,
+                  out_dtype=None) -> jnp.ndarray:
+    """``mma_dot`` with the fused epilogue contract (epilogue.py).
+
+    Pallas path: bias/activation/residual are applied inside the final
+    k-step store, so the accumulator makes no extra HBM round trip.  XLA
+    path: same semantics via the shared ``epilogue.apply`` on the
+    accumulator matrix.  Both match the unfused ``mma_dot`` + jnp epilogue
+    bit-for-bit at fp32 (tests/test_epilogue.py).
+    """
+    epilogue = epilogue or _epilogue.make(bias=bias, residual=residual)
+    if epilogue.is_identity and (neg_product or neg_acc or alpha != 1.0
+                                 or beta != 1.0):
+        pass  # accumulate-form passthrough still needs the fused impl
+    elif epilogue.is_identity:
+        return mma_dot(x, y, c, kind=kind, block=block,
+                       use_pallas=use_pallas, interpret=interpret,
+                       out_dtype=out_dtype)
+    if kind == Ger.F32GER_3XBF16:
+        # Chain the three bf16 passes for the product alone, then apply the
+        # accumulate forms + epilogue on the fp32 result here (the fp32
+        # split is an ops-level lowering; the c term must NOT seed the
+        # chain or neg_product/neg_acc/alpha/beta would be dropped).
+        prod = mma_dot(x, y, None, kind=kind, block=block,
+                       use_pallas=use_pallas, interpret=interpret)
+        out = -prod if neg_product else prod
+        if c is not None:
+            acc = c.astype(out.dtype)
+            if beta != 1.0:
+                acc = acc * jnp.asarray(beta, out.dtype)
+            out = out + (-acc if neg_acc else acc)
+        if alpha != 1.0:
+            out = out * jnp.asarray(alpha, out.dtype)
+        out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
+        return out.astype(out_dtype) if out_dtype else out
+    epilogue.validate(precision.policy(kind).acc_dtype, bias=bias,
+                      residual=residual)
+    block = _resolve_block(x, y, kind, block, epilogue_key=epilogue.key,
+                           use_pallas=use_pallas)
+    return _mma_dot_fused_impl(
+        x, y, c, bias, residual, kind=kind, epilogue=epilogue, block=block,
+        use_pallas=use_pallas, interpret=interpret, out_dtype=out_dtype,
+        neg_product=neg_product, neg_acc=neg_acc, alpha=alpha, beta=beta)
 
 
 def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,

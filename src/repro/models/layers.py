@@ -190,10 +190,12 @@ def sdpa(q, k, v, *, causal, window=None, q_offset=0, kv_positions=None,
 
 def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
                     window=None, q_offset=0, kv_positions=None, valid=None,
-                    cross_x=None):
+                    cross_x=None, residual=None):
     """Full attention block: projections + RoPE + SDPA + output proj.
 
     cross_x: keys/values come from the encoder stream (whisper decoder).
+    ``residual`` is fused into the output projection's deprime store
+    (facility.fdot_fused), saving the separate elementwise read-add pass.
     Returns (out, (k, v)) so callers can build KV caches.
     """
     b, s, d = x.shape
@@ -220,7 +222,8 @@ def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
     causal = cfg.causal if causal is None else causal
     out = sdpa(q, kq, vq, causal=causal, window=window, q_offset=q_offset,
                kv_positions=kv_positions, valid=valid)
-    out = facility.fdot(out.reshape(b, s, h * hd), p["wo"])
+    out = facility.fdot_fused(out.reshape(b, s, h * hd), p["wo"],
+                              residual=residual)
     return out, (k, v)
 
 
@@ -246,15 +249,16 @@ def mlp_axes(cfg, gated=None):
     return p
 
 
-def apply_mlp(p, x, cfg):
-    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    h = facility.fdot(x, p["w1"])
+def apply_mlp(p, x, cfg, residual=None):
+    """MLP with both epilogues fused (facility.fdot_fused): the activation
+    rides the w1 GEMM's deprime store — computed on the fp32 accumulator,
+    not the cast-down activation dtype — and the block residual rides the
+    w2 GEMM's, so neither intermediate makes an extra HBM round trip."""
+    h = facility.fdot_fused(x, p["w1"], activation=cfg.act)
     h = shard(h, "batch", None, "mlp")
     if cfg.gated_mlp:
-        h = act(h) * facility.fdot(x, p["w3"])
-    else:
-        h = act(h)
-    return facility.fdot(h, p["w2"])
+        h = h * facility.fdot(x, p["w3"])
+    return facility.fdot_fused(h, p["w2"], residual=residual)
 
 
 # ----------------------------------------------------------------------

@@ -177,24 +177,27 @@ def _apply_dense_block(bp, h, cfg, *, cos_sin, is_moe, causal=None,
                        cross_x=None, kv=None, window=None, q_offset=0,
                        kv_positions=None, valid=None):
     hn = L.apply_norm(bp["attn_norm"], h, cfg)
+    # Residual adds ride the output-projection / w2 GEMM epilogues
+    # (layers.apply_attention / apply_mlp `residual=`): one fused store
+    # instead of a separate read-modify-write of the activations.
     a, kv_out = L.apply_attention(
         bp["attn"], hn, cfg, cos_sin=cos_sin, kv=kv, causal=causal,
         window=window, q_offset=q_offset, kv_positions=kv_positions,
-        valid=valid)
-    h = _residual_shard(h + a)
+        valid=valid, residual=h)
+    h = _residual_shard(a)
     aux = jnp.zeros((), jnp.float32)
     cross_kv = None
     if cross_x is not None and "cross" in bp:
         hn = L.apply_norm(bp["cross_norm"], h, cfg)
         ca, cross_kv = L.apply_attention(bp["cross"], hn, cfg, causal=False,
-                                         cross_x=cross_x)
-        h = _residual_shard(h + ca)
+                                         cross_x=cross_x, residual=h)
+        h = _residual_shard(ca)
     hn = L.apply_norm(bp["mlp_norm"], h, cfg)
     if is_moe:
         m, aux = MOE.apply_moe(bp["moe"], hn, cfg)
+        h = _residual_shard(h + m)
     else:
-        m = L.apply_mlp(bp["mlp"], hn, cfg)
-    h = _residual_shard(h + m)
+        h = _residual_shard(L.apply_mlp(bp["mlp"], hn, cfg, residual=h))
     return h, aux, kv_out, cross_kv
 
 

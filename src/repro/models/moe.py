@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
+from repro.kernels import epilogue as _epilogue
 from repro.models import layers
 from repro.parallel.api import shard
 
@@ -128,7 +129,10 @@ def apply_moe(p, x, cfg):
     xe = shard(xe.reshape(e, cap, d), "experts", None, None)
 
     # ---- expert GEMMs (facility: batched rank-k updates) ----
-    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    # Same activation definitions as the fused dense-MLP epilogue
+    # (epilogue.ACTIVATIONS uses exact erf gelu), so one network never
+    # mixes two gelu formulations between expert and dense paths.
+    act = _epilogue.ACTIVATIONS[cfg.act]
     h1 = facility.feinsum("ecd,edf->ecf", xe, p["w1"])
     h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
     if cfg.gated_mlp:

@@ -144,6 +144,48 @@ class RooflineTerms:
         }
 
 
+# ----------------------------------------------------------------------
+# Kernel-level GEMM roofline: the autotuner's ranking prior
+# ----------------------------------------------------------------------
+
+def gemm_traffic_bytes(m: int, n: int, k: int, cfg, pol) -> int:
+    """HBM traffic of the accumulator-resident kernel for one BlockConfig.
+
+    Each X panel is read once per N-tile column, each Y panel once per
+    M-tile row (Pallas revisits both for every (i, j) output tile); C is
+    written exactly once — the accumulator-residency payoff.
+    """
+    gm, gn, gk = cfg.grid_of(m, n, k)
+    x_reads = gm * gn * gk * cfg.bm * cfg.bk * pol.in_bytes
+    y_reads = gm * gn * gk * cfg.bk * cfg.bn * pol.in_bytes
+    c_write = m * n * pol.acc_bytes
+    return x_reads + y_reads + c_write
+
+
+def gemm_projected_time(m: int, n: int, k: int, cfg, pol,
+                        hw: dict = V5E) -> float:
+    """Roofline time (s) for the blocked GEMM on the modeled chip.
+
+    Compute term charges the *padded* grid volume (fringe tiles do full
+    MXU work on masked lanes), so configs that overshoot the problem pay
+    for it; memory term uses the block-level traffic model.
+    """
+    gm, gn, gk = cfg.grid_of(m, n, k)
+    padded_flops = 2.0 * (gm * cfg.bm) * (gn * cfg.bn) * (gk * cfg.bk)
+    t_compute = padded_flops / hw["peak_flops"]
+    t_memory = gemm_traffic_bytes(m, n, k, cfg, pol) / hw["hbm_bw"]
+    return max(t_compute, t_memory)
+
+
+def gemm_projected_util(m: int, n: int, k: int, cfg, pol,
+                        hw: dict = V5E) -> float:
+    """Useful-FLOPs fraction of peak under the projected time: the score
+    plotted against the paper's Figure 11 (% of peak vs problem size)."""
+    ideal = 2.0 * m * n * k / hw["peak_flops"]
+    t = gemm_projected_time(m, n, k, cfg, pol, hw)
+    return ideal / t if t else 0.0
+
+
 def _encdec_split(cfg) -> tuple[float, float]:
     """Rough (encoder, decoder) active-param split for enc-dec archs:
     encoder = enc_layers * (attn + ffn); decoder adds cross-attn."""

@@ -1,3 +1,5 @@
+import tempfile
+
 import numpy as np
 import pytest
 
@@ -5,3 +7,14 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _hermetic_autotune_cache():
+    """Keep dispatch-time autotune-cache consults off the user's real cache
+    file: tests run against a throwaway, initially-empty store."""
+    from repro.core import autotune
+    with tempfile.TemporaryDirectory() as d:
+        autotune._DEFAULT_CACHE = autotune.AutotuneCache(d + "/autotune.json")
+        yield
+        autotune._DEFAULT_CACHE = None

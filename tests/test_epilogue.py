@@ -1,0 +1,212 @@
+"""Fused-epilogue contract: every epilogue combination, on every path,
+must match the unfused kernel + the shared jnp epilogue — bit-for-bit at
+fp32 (both sides jitted: eager-vs-jit XLA op fusion differs by ulps, the
+kernels do not)."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility
+from repro.core.precision import Ger, policy
+from repro.kernels import epilogue as E
+from repro.kernels import mma_attention as KA
+from repro.kernels import mma_conv as KC
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+FLOAT_KINDS = [Ger.F32GER, Ger.BF16GER2, Ger.F16GER2]
+INT_KINDS = [Ger.I8GER4, Ger.I16GER2]
+
+# bias x activation x residual sweep (activation None / relu / gelu / silu)
+EP_COMBOS = [E.Epilogue(bias=b, activation=a, residual=r)
+             for b, a, r in itertools.product(
+                 (False, True), (None, "relu", "gelu", "silu"),
+                 (False, True))
+             if not E.Epilogue(bias=b, activation=a, residual=r).is_identity]
+
+
+def _operands(kind, m, k, n, rng):
+    pol = policy(kind)
+    if jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        x = jnp.asarray(rng.integers(-50, 50, (m, k)), pol.x_dtype)
+        lo, hi = (0, 200) if jnp.dtype(pol.y_dtype) == jnp.uint8 else (-50, 50)
+        y = jnp.asarray(rng.integers(lo, hi, (k, n)), pol.y_dtype)
+        bias = jnp.asarray(rng.integers(-5, 5, (n,)), jnp.int32)
+        res = jnp.asarray(rng.integers(-5, 5, (m, n)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.normal(size=(m, k)), pol.x_dtype)
+        y = jnp.asarray(rng.normal(size=(k, n)), pol.y_dtype)
+        bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        res = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    return x, y, bias, res
+
+
+@pytest.mark.parametrize("kind", FLOAT_KINDS)
+@pytest.mark.parametrize("ep", EP_COMBOS, ids=lambda e: e.key)
+@pytest.mark.parametrize("use_pallas", [True, False],
+                         ids=["pallas", "xla"])
+def test_fused_matches_unfused_bitwise_fp32(kind, ep, use_pallas, rng):
+    """The acceptance invariant: fused == jit(unfused mma_dot + epilogue)
+    with zero tolerance at fp32 output, on both dispatch paths."""
+    m, k, n = 100, 130, 300   # fringe on all dims
+    x, y, bias, res = _operands(kind, m, k, n, rng)
+    bias = bias if ep.bias else None
+    res = res if ep.residual else None
+
+    fused = ops.mma_dot_fused(x, y, kind=kind, epilogue=ep, bias=bias,
+                              residual=res, use_pallas=use_pallas)
+
+    @jax.jit
+    def unfused(x, y):
+        out = ops.mma_dot(x, y, kind=kind, use_pallas=use_pallas)
+        return E.apply(out, ep, bias=bias, residual=res)
+
+    want = unfused(x, y)
+    assert fused.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+@pytest.mark.parametrize("kind", INT_KINDS)
+@pytest.mark.parametrize("ep", [E.Epilogue(bias=True),
+                                E.Epilogue(activation="relu"),
+                                E.Epilogue(bias=True, activation="relu",
+                                           residual=True)],
+                         ids=lambda e: e.key)
+def test_fused_int_kinds_exact(kind, ep, rng):
+    """Integer accumulators: bias/relu/residual are exact in int32."""
+    m, k, n = 32, 64, 128
+    x, y, bias, res = _operands(kind, m, k, n, rng)
+    bias = bias if ep.bias else None
+    res = res if ep.residual else None
+    fused = ops.mma_dot_fused(x, y, kind=kind, epilogue=ep, bias=bias,
+                              residual=res)
+    want = E.apply(ref.ger(x, y, kind), ep, bias=bias, residual=res)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_int_kind_rejects_float_activation(rng):
+    x, y, _, _ = _operands(Ger.I8GER4, 8, 16, 128, rng)
+    with pytest.raises(ValueError, match="float accumulator"):
+        ops.mma_dot_fused(x, y, kind=Ger.I8GER4,
+                          epilogue=E.Epilogue(activation="gelu"))
+
+
+def test_epilogue_operand_mismatch_raises(rng):
+    x, y, bias, _ = _operands(Ger.F32GER, 8, 16, 128, rng)
+    with pytest.raises(ValueError, match="bias"):
+        ops.mma_dot_fused(x, y, kind=Ger.F32GER,
+                          epilogue=E.Epilogue(bias=True))
+    with pytest.raises(ValueError):
+        # operands without a matching epilogue are rejected by the kernel
+        from repro.kernels import mma_gemm as K
+        K.mma_gemm(x, y, kind=Ger.F32GER, bias=bias, interpret=True)
+
+
+def test_fused_accumulate_forms(rng):
+    """pp/np forms + alpha/beta still compose with the epilogue."""
+    x, y, bias, res = _operands(Ger.F32GER, 64, 96, 128, rng)
+    c = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    ep = E.Epilogue(bias=True, activation="relu")
+    for up in (True, False):
+        got = ops.mma_dot_fused(x, y, c, kind=Ger.F32GER, epilogue=ep,
+                                bias=bias, alpha=0.5, beta=2.0,
+                                neg_product=True, use_pallas=up)
+        acc = ref.ger(x, y, Ger.F32GER, acc=2.0 * c, neg_product=True)
+        want = E.apply(0.5 * acc, ep, bias=bias)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_3xbf16_accumulate_forms_not_dropped(rng):
+    """Regression: the F32GER_3XBF16 branch must honor
+    neg_product/neg_acc/alpha/beta instead of silently dropping them."""
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    got = ops.mma_dot_fused(x, y, c, kind=Ger.F32GER_3XBF16,
+                            neg_product=True, beta=2.0, alpha=0.5)
+    want = 0.5 * (-(np.asarray(x) @ np.asarray(y)) + 2.0 * np.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_beta_scales_in_acc_dtype(rng):
+    """Regression: XLA and Pallas paths must both cast c to the
+    accumulator dtype *before* the beta scale (bf16 c, beta != 1)."""
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(64, 128)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(size=(32, 128)), jnp.bfloat16)
+    outs = [np.asarray(ops.mma_dot_fused(
+        x, y, c, kind=Ger.BF16GER2, beta=0.5, use_pallas=up))
+        for up in (True, False)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-6, atol=2e-6)
+    want = np.asarray(x, np.float32) @ np.asarray(y, np.float32) \
+        + 0.5 * np.asarray(c, np.float32)
+    np.testing.assert_allclose(outs[0], want, rtol=2e-2, atol=2e-2)
+
+
+def test_conv_fused_epilogue(rng):
+    img = jnp.asarray(rng.normal(size=(2, 10, 24, 3)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    base = KC.mma_conv2d(img, ker, interpret=True)
+    res = jnp.asarray(rng.normal(size=base.shape), jnp.float32)
+    ep = E.Epilogue(bias=True, activation="gelu", residual=True)
+    fused = KC.mma_conv2d(img, ker, ep=ep, bias=bias, residual=res,
+                          interpret=True)
+    want = jax.jit(lambda b: E.apply(b, ep, bias=bias, residual=res))(base)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    # the hoisted single-dot form must still match the oracle
+    np.testing.assert_allclose(np.asarray(base),
+                               np.asarray(ref.conv2d(img, ker)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_fused_epilogue(rng):
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    base = KA.flash_attention(q, q, q, interpret=True)
+    res = jnp.asarray(rng.normal(size=q.shape), jnp.float32)
+    ep = E.Epilogue(residual=True)
+    fused = KA.flash_attention(q, q, q, ep=ep, residual=res,
+                               interpret=True)
+    want = jax.jit(lambda b: E.apply(b, ep, residual=res))(base)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+def test_fdot_fused_matches_manual(rng):
+    """facility.fdot_fused == (dot in acc dtype) -> epilogue -> cast, on
+    the SPMD (non-pallas) path the models use."""
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.BF16GER2, out_dtype=jnp.bfloat16)):
+        got = facility.fdot_fused(x, w, activation="silu")
+        acc = jax.lax.dot_general(
+            x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+            (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        want = E.apply(acc, E.Epilogue(activation="silu")).astype(
+            jnp.bfloat16)
+    np.testing.assert_allclose(
+        np.asarray(got, jnp.float32), np.asarray(want, jnp.float32),
+        rtol=1e-2, atol=1e-2)
+
+
+def test_fdot_fused_pallas_path(rng):
+    """Pallas-configured facility routes fdot_fused through the fused
+    kernel and still matches the XLA path numerically."""
+    x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        got = facility.fdot_fused(x, w, bias=bias, activation="relu")
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32)):
+        want = facility.fdot_fused(x, w, bias=bias, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

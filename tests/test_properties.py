@@ -1,7 +1,11 @@
 """Hypothesis property tests over the system's invariants."""
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp
