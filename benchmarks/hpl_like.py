@@ -43,8 +43,9 @@ def _lu_blocked(a: np.ndarray, nb: int, gemm) -> tuple[np.ndarray, float]:
 
 def run():
     rng = np.random.default_rng(0)
-    gemm = jax.jit(lambda x, y: facility.fdot(
-        x, y, ger=Ger.F32GER, out_dtype=jnp.float32))
+    gemm = jax.jit(lambda x, y: facility.contract(
+        facility.DOT, x, y,
+        plan=facility.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)))
     for n in (256, 512, 1024):
         a = rng.normal(size=(n, n)).astype(np.float32)
         b = a.copy()

@@ -20,7 +20,10 @@ rng = np.random.default_rng(0)
 # --- 1. A rank-k update through the facility (paper eq. 1/2) -----------
 x = jnp.asarray(rng.normal(size=(256, 512)), jnp.bfloat16)
 y = jnp.asarray(rng.normal(size=(512, 384)), jnp.bfloat16)
-acc = ops.mma_dot(x, y, kind=Ger.BF16GER2)          # bf16 in, fp32 acc
+acc = facility.contract("mk,kn->mn", x, y,
+                        plan=facility.Plan(ger=Ger.BF16GER2,
+                                           out_dtype=facility.ACC,
+                                           backend="pallas"))
 print("1. xvbf16ger2:", acc.shape, acc.dtype)
 
 # --- 2. Accumulate forms: A <- -XY + A  (the 'np' suffix) --------------
@@ -44,7 +47,10 @@ print("3. pmxvbf16ger2 masked residual tile: OK")
 # --- 4. int8 x uint8 with int32 accumulation (xvi8ger4) ----------------
 xi = jnp.asarray(rng.integers(-128, 128, (64, 256)), jnp.int8)
 yi = jnp.asarray(rng.integers(0, 256, (256, 64)), jnp.uint8)
-qout = ops.mma_dot(xi, yi, kind=Ger.I8GER4)
+qout = facility.contract("mk,kn->mn", xi, yi,
+                         plan=facility.Plan(ger=Ger.I8GER4,
+                                            out_dtype=facility.ACC,
+                                            backend="pallas"))
 print("4. xvi8ger4:", qout.dtype, "max", int(qout.max()))
 
 # --- 5. SCONV: convolution without materializing patches ---------------
@@ -60,6 +66,6 @@ with facility.configure(facility.FacilityConfig(ger=Ger.BF16GER2,
                                                 out_dtype=jnp.bfloat16)):
     h = jnp.asarray(rng.normal(size=(2, 16, 128)), jnp.bfloat16)
     w = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
-    out = facility.fdot(h, w)       # policy casting + fp32 accumulation
-print("6. facility.fdot in a model context:", out.shape, out.dtype)
+    out = facility.contract(facility.DOT, h, w)  # policy cast + fp32 acc
+print("6. facility.contract in a model context:", out.shape, out.dtype)
 print("\nquickstart OK")

@@ -7,7 +7,21 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== facility-purity lint =="
+# facility.contract is the only sanctioned route to GEMM-shaped work:
+# raw jnp.dot/einsum/matmul may appear only inside the facility's own
+# lowering layer (core/facility.py, core/lowering.py), the architected
+# oracles (kernels/ref.py), and tests.
+if grep -rnE "jnp\.(dot|einsum|matmul)\(" src --include="*.py" \
+        | grep -vE "src/repro/core/(facility|lowering)\.py|src/repro/kernels/ref\.py"; then
+    echo "FAIL: raw jnp.dot/einsum/matmul outside the facility lowering layer" >&2
+    exit 1
+fi
+echo "facility purity OK"
+
 echo "== tier-1 tests =="
+# tests/conftest.py escalates the deprecated shims' DeprecationWarnings to
+# errors for in-repo (repro.*) callers.
 python -m pytest -x -q
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then

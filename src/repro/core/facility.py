@@ -1,22 +1,28 @@
-"""The MMA facility as a composable JAX module (the paper's contribution).
+"""The MMA facility: ONE architected builtin in front of all matrix math.
 
 Every matrix contraction in the framework — attention projections, FFN and
-MoE expert GEMMs, Mamba2 SSD chunk products, logits — routes through this
-module instead of calling ``jnp.dot`` directly.  That is the system-level
-reading of the paper's programming model: a small set of *built-ins* with
-architected semantics (ger kind = input dtypes + accumulator dtype +
-accumulate form), beneath which the compiler owns scheduling and register
-(here: sharding and layout) allocation.
+MoE expert GEMMs, attention scores/values, Mamba2 SSD chunk products,
+logits, the int8 serving path — routes through :func:`contract`.  That is
+the system-level reading of the paper's programming model (section IV): a
+small set of *built-ins* with architected semantics (ger kind = input
+dtypes + accumulator dtype + accumulate form), beneath which the compiler
+owns scheduling and register (here: sharding, layout, and block) allocation.
 
-Two lowerings share the same semantics (tested equivalent in
-tests/test_facility.py):
+    contract(spec, x, y, plan=Plan(...))
 
-  * ``lax.dot_general`` with ``preferred_element_type`` — the pjit/SPMD
-    path used by full models, which XLA lowers to MXU rank-k-update loops
-    with resident accumulators on TPU;
-  * the explicit Pallas kernels in ``repro.kernels`` — the hand-tiled path
-    (the paper's hand-written OpenBLAS kernels), used on hot spots and for
-    the benchmark/validation suites.
+``spec`` is an einsum-like contraction spec (``"mk,kn->mn"``,
+``"...k,kn->...n"``, ``"ecd,edf->ecf"``, ...) and :class:`Plan` bundles the
+static policy: ger family, epilogue, accumulate forms, out dtype, backend,
+and block override.  Lowering is owned by the pluggable registry in
+``repro.core.lowering``: backends (``pallas`` / ``xla`` / ``ref``) register
+implementations per (op-class, ger-family, fused) key, all built on the
+same explicit ACC lifecycle (prime -> rank-k updates -> deprime).
+
+The legacy entry points (``fdot``, ``fdot_fused``, ``feinsum``, and
+``kernels.ops.mma_dot[_fused]``) survive as thin deprecated shims over
+``contract``; in-repo callers must use ``contract`` directly (the tier-1
+suite escalates the shims' DeprecationWarnings to errors for ``repro.*``
+callers, and ``scripts/ci.sh`` lints raw ``jnp.dot/einsum/matmul`` use).
 """
 
 from __future__ import annotations
@@ -27,11 +33,16 @@ import dataclasses
 import functools
 
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import precision
+from repro.core import lowering, precision
 
 Ger = precision.Ger
+Plan = lowering.Plan
+Dequant = lowering.Dequant
+ACC = lowering.ACC
+
+# The workhorse spec: contract the last axis of x with the first of w.
+DOT = "...k,kn->...n"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,8 +51,9 @@ class FacilityConfig:
 
     ger: Ger = Ger.BF16GER2          # activation-side GEMM family
     out_dtype: jnp.dtype = jnp.bfloat16   # activation dtype between ops
-    # Use hand-tiled Pallas kernels for 2-D dots (TPU hot path).  Off by
-    # default because the SPMD model path wants a shardable dot_general.
+    # Use hand-tiled Pallas kernels for GEMM-shaped contractions (TPU hot
+    # path).  Off by default because the SPMD model path wants a shardable
+    # dot_general.
     use_pallas: bool = False
     interpret: bool = True           # Pallas interpret mode (CPU container)
 
@@ -62,45 +74,47 @@ def configure(cfg: FacilityConfig):
         _CONFIG.reset(token)
 
 
-def _cast_in(x, pol: precision.GerPolicy, side: str):
-    want = pol.x_dtype if side == "x" else pol.y_dtype
-    if pol.packed_int4:
-        return x  # already packed by the caller
-    return x.astype(want) if x.dtype != jnp.dtype(want) else x
+def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray, *,
+             plan: Plan | None = None,
+             acc: jnp.ndarray | None = None,
+             bias: jnp.ndarray | None = None,
+             residual: jnp.ndarray | None = None,
+             dequant: Dequant | None = None) -> jnp.ndarray:
+    """The facility's single architected builtin.
 
+    ``spec`` names the contraction; ``plan`` (static) selects ger family,
+    accumulate form, epilogue, out dtype, backend, and block override —
+    unset fields resolve against the ambient :class:`FacilityConfig`.
+    ``acc`` seeds the accumulator (the pp/np/pn/nn forms, scaled by
+    ``plan.beta``); ``bias``/``residual`` are the fused-epilogue operands;
+    ``dequant`` is the quant path's deprime rescale.
+
+    Dispatch goes through the lowering registry (``repro.core.lowering``):
+    specs that normalize to (batched) 2-D GEMMs reach the autotuned Pallas
+    kernels or the shardable ``lax.dot_general`` lowering; everything else
+    falls back to the general einsum lowering.
+    """
+    return lowering.execute(spec, x, y, cfg=current(), plan=plan, acc=acc,
+                            bias=bias, residual=residual, dequant=dequant)
+
+
+# ----------------------------------------------------------------------
+# Deprecated shims (kept so external callers and the tier-1 suite keep
+# working unchanged; in-repo callers use `contract`)
+# ----------------------------------------------------------------------
 
 def fdot(x: jnp.ndarray, w: jnp.ndarray, *, ger: Ger | None = None,
          out_dtype=None) -> jnp.ndarray:
-    """Contract the last axis of ``x`` with the first axis of ``w``.
+    """Deprecated: ``contract(facility.DOT, x, w, plan=Plan(ger=...))``.
 
-    This is the workhorse built-in: ``(..., K) x (K, N) -> (..., N)`` with
-    ger-policy input casting and high-precision resident accumulation.
+    Contracts the last axis of ``x`` with the first axis of ``w``:
+    ``(..., K) x (K, N) -> (..., N)`` with ger-policy input casting and
+    high-precision resident accumulation.
     """
-    cfg = current()
-    ger = ger or cfg.ger
-    out_dtype = out_dtype or cfg.out_dtype
-    pol = precision.policy(ger)
-
-    if cfg.use_pallas and x.ndim >= 2 and w.ndim == 2:
-        from repro.kernels import ops  # local import: avoids cycle
-        lead = x.shape[:-1]
-        out = ops.mma_dot(x.reshape(-1, x.shape[-1]), w, kind=ger,
-                          interpret=cfg.interpret, out_dtype=out_dtype)
-        return out.reshape(*lead, w.shape[-1])
-
-    if ger == Ger.F32GER_3XBF16:
-        from repro.kernels import ops
-        lead = x.shape[:-1]
-        out = ops.mma_dot(x.reshape(-1, x.shape[-1]), w,
-                          kind=ger, use_pallas=False, out_dtype=out_dtype)
-        return out.reshape(*lead, w.shape[-1])
-
-    x = _cast_in(x, pol, "x")
-    w = _cast_in(w, pol, "y")
-    out = lax.dot_general(
-        x, w, (((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=pol.acc_dtype)
-    return out.astype(out_dtype)
+    lowering.deprecated_shim(
+        "facility.fdot", "contract(facility.DOT, x, w, "
+        "plan=Plan(ger=..., out_dtype=...))")
+    return contract(DOT, x, w, plan=Plan(ger=ger, out_dtype=out_dtype))
 
 
 def fdot_fused(x: jnp.ndarray, w: jnp.ndarray, *,
@@ -108,68 +122,36 @@ def fdot_fused(x: jnp.ndarray, w: jnp.ndarray, *,
                activation: str | None = None,
                residual: jnp.ndarray | None = None,
                ger: Ger | None = None, out_dtype=None) -> jnp.ndarray:
-    """``fdot`` with a fused epilogue: activation/bias/residual applied to
+    """Deprecated: ``contract(facility.DOT, x, w, plan=Plan(epilogue=...),
+    bias=..., residual=...)``.
+
+    ``fdot`` with a fused epilogue: activation/bias/residual applied to
     the resident accumulator before the out_dtype cast (epilogue contract,
-    DESIGN.md section 4).
-
-    Pallas path: fused into the kernel's deprime store.  XLA path: the
-    same ``epilogue.apply`` on the ``preferred_element_type`` accumulator,
-    which XLA fuses into the matmul epilogue on TPU — either way the
-    activation computes in acc dtype (fp32), not in the cast-down
-    activation dtype, so fused beats unfused numerically as well.
+    DESIGN.md), in acc dtype (fp32) rather than the cast-down activation
+    dtype.
     """
-    from repro.kernels import epilogue as _epilogue  # local: avoids cycle
+    from repro.kernels import epilogue as _epilogue
 
-    cfg = current()
-    ger = ger or cfg.ger
-    out_dtype = out_dtype or cfg.out_dtype
-    pol = precision.policy(ger)
+    lowering.deprecated_shim(
+        "facility.fdot_fused", "contract(facility.DOT, x, w, "
+        "plan=Plan(epilogue=Epilogue(...)), bias=..., residual=...)")
     ep = _epilogue.make(bias=bias, activation=activation, residual=residual)
-    if ep.is_identity:
-        return fdot(x, w, ger=ger, out_dtype=out_dtype)
-
-    lead = x.shape[:-1]
-    res2d = None
-    if residual is not None:
-        res2d = residual.reshape(-1, residual.shape[-1])
-
-    if cfg.use_pallas and x.ndim >= 2 and w.ndim == 2:
-        from repro.kernels import ops
-        out = ops.mma_dot_fused(
-            x.reshape(-1, x.shape[-1]), w, kind=ger, epilogue=ep,
-            bias=bias, residual=res2d, interpret=cfg.interpret,
-            out_dtype=out_dtype)
-        return out.reshape(*lead, w.shape[-1])
-
-    if ger == Ger.F32GER_3XBF16:
-        from repro.kernels import ops
-        out = ops.mma_dot_fused(
-            x.reshape(-1, x.shape[-1]), w, kind=ger, epilogue=ep,
-            bias=bias, residual=res2d, use_pallas=False,
-            out_dtype=out_dtype)
-        return out.reshape(*lead, w.shape[-1])
-
-    xin = _cast_in(x, pol, "x")
-    win = _cast_in(w, pol, "y")
-    out = lax.dot_general(
-        xin, win, (((xin.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=pol.acc_dtype)
-    out = _epilogue.apply(out, ep, bias=bias, residual=residual)
-    return out.astype(out_dtype)
+    return contract(DOT, x, w, plan=Plan(ger=ger, out_dtype=out_dtype,
+                                         epilogue=ep),
+                    bias=bias, residual=residual)
 
 
 def feinsum(spec: str, a: jnp.ndarray, b: jnp.ndarray, *,
             ger: Ger | None = None, out_dtype=None) -> jnp.ndarray:
-    """Facility-routed einsum for contractions that are not plain fdot
-    (attention scores/values, batched expert GEMMs, SSD chunk products)."""
-    cfg = current()
-    ger = ger or cfg.ger
-    out_dtype = out_dtype or cfg.out_dtype
-    pol = precision.policy(ger)
-    a = _cast_in(a, pol, "x")
-    b = _cast_in(b, pol, "y")
-    out = jnp.einsum(spec, a, b, preferred_element_type=pol.acc_dtype)
-    return out.astype(out_dtype)
+    """Deprecated: ``contract(spec, a, b, plan=Plan(...))``.
+
+    Facility-routed einsum for contractions that are not plain fdot
+    (attention scores/values, batched expert GEMMs, SSD chunk products).
+    """
+    lowering.deprecated_shim(
+        "facility.feinsum",
+        "contract(spec, a, b, plan=Plan(ger=..., out_dtype=...))")
+    return contract(spec, a, b, plan=Plan(ger=ger, out_dtype=out_dtype))
 
 
 @functools.lru_cache(maxsize=None)

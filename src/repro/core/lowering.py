@@ -1,0 +1,861 @@
+"""The lowering registry beneath ``facility.contract``.
+
+The paper's programming model (section IV) is one small set of architected
+built-ins in front of every matrix operation, with the compiler owning the
+lowering; Kuzma et al. (PAPERS.md) push the same split further by making the
+lowering a swappable compiler layer.  This module is that layer for the
+repo: the single builtin ``facility.contract(spec, x, y, plan=...)`` parses
+an einsum-like contraction spec, resolves a :class:`Plan` against the
+ambient :class:`~repro.core.facility.FacilityConfig`, and dispatches to a
+registered lowering.
+
+Registry
+--------
+Lowerings register per ``(backend, op_class, ger, fused)`` key:
+
+  * ``backend``:  ``"pallas"`` (hand-tiled kernels, ``interpret=True`` on
+    CPU), ``"xla"`` (one ``lax.dot_general`` the SPMD partitioner can
+    shard), ``"ref"`` (eager architected oracles — ground truth).
+  * ``op_class``: ``"gemm"`` (any spec that normalizes to a — possibly
+    batched — 2-D GEMM), ``"gemm.saturating"`` (xvi16ger2s-style clamped
+    accumulation), ``"einsum"`` (general contraction fallback).
+  * ``ger``/``fused``: optional specializations; lookup falls back from the
+    most specific key to ``(backend, op_class, None, None)``.
+
+ACC lifecycle
+-------------
+Every gemm-class lowering implements the same three-phase accumulator
+lifecycle (paper fig. 4 — prime, rank-k updates, deprime):
+
+    prime    acc <- 0 | [-] beta * C          (xxsetaccz / accumulate forms)
+    update   acc <- acc [-] X_i @ Y_i         (one per rank-k pass)
+    deprime  out <- cast(epilogue(alpha * acc))   (single results-bus store)
+
+The Pallas kernel realizes it inside VMEM scratch (``mma_gemm``); the XLA
+and ref lowerings realize it with the explicit :class:`Accumulator` object
+below.  Two plug-in points hang off the lifecycle:
+
+  * *expansion hooks* (``register_expansion``) rewrite one architected
+    pass into several — ``F32GER_3XBF16`` becomes three chained
+    ``BF16GER2`` updates over one resident accumulator, replacing the
+    special-case branches that used to be copy-pasted across
+    ``facility.fdot`` / ``facility.fdot_fused``;
+  * the *deprime stage* takes the fused epilogue contract
+    (``kernels/epilogue.py``) and the :class:`Dequant` rescale that turns
+    ``quant.qdot`` into an ``I8GER4`` plan instead of a parallel code path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import precision
+
+Ger = precision.Ger
+
+# Sentinel for Plan.out_dtype: keep the accumulator dtype (what the kernel
+# entry points mean by ``out_dtype=None``, distinct from "facility default").
+ACC = "acc"
+
+# Observability: execute() counts dispatches per (backend, op_class, ger
+# value).  Tests assert on deltas (e.g. "MoE expert dots reached the Pallas
+# gemm path"); reset with ``DISPATCH_COUNTS.clear()``.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+# ----------------------------------------------------------------------
+# Plan: the architected call signature of the builtin
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Static description of one ``contract`` call (jit-hashable).
+
+    Bundles what used to be scattered kwargs across ``fdot`` /
+    ``fdot_fused`` / ``mma_dot`` / ``mma_dot_fused`` / ``qdot``.  ``None``
+    fields resolve against the ambient FacilityConfig at dispatch.
+    """
+
+    ger: Ger | None = None            # rank-k family; None -> config
+    out_dtype: object = None          # None -> config; ACC -> acc dtype
+    backend: str | None = None        # None -> "pallas" if cfg.use_pallas
+    epilogue: object = None           # kernels.epilogue.Epilogue | None
+    block: tuple[int, int, int] | None = None   # Pallas block override
+    # Accumulate forms (paper eq. 2): out = alpha * [-](X@Y) + beta * [-]C
+    neg_product: bool = False
+    neg_acc: bool = False
+    alpha: float = 1.0
+    beta: float = 1.0
+    saturating: bool = False          # xvi16ger2s-style clamped updates
+    interpret: bool | None = None     # None -> config (Pallas CPU mode)
+
+
+# ----------------------------------------------------------------------
+# Spec parsing: einsum-like contraction specs -> GEMM structure
+# ----------------------------------------------------------------------
+
+_ELL_LABELS = "ZYXWVU"   # reserved labels for '...' expansion
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsedSpec:
+    """Static contraction structure for one (spec, x.ndim, y.ndim)."""
+
+    x_labels: tuple[str, ...]
+    y_labels: tuple[str, ...]
+    out_labels: tuple[str, ...]
+    batch: tuple[str, ...]       # in both inputs and the output
+    contract: tuple[str, ...]    # in both inputs, not the output
+    x_free: tuple[str, ...]      # "M" labels
+    y_free: tuple[str, ...]      # "N" labels
+
+    @property
+    def dnums(self):
+        """lax.dot_general dimension_numbers for the un-normalized form."""
+        xi = {d: i for i, d in enumerate(self.x_labels)}
+        yi = {d: i for i, d in enumerate(self.y_labels)}
+        return ((tuple(xi[d] for d in self.contract),
+                 tuple(yi[d] for d in self.contract)),
+                (tuple(xi[d] for d in self.batch),
+                 tuple(yi[d] for d in self.batch)))
+
+    @property
+    def natural_out(self) -> tuple[str, ...]:
+        """dot_general's output order: batch, then M, then N labels."""
+        return self.batch + self.x_free + self.y_free
+
+    @property
+    def out_perm(self) -> tuple[int, ...] | None:
+        """Transpose taking natural_out to the spec's output order."""
+        nat = self.natural_out
+        if nat == self.out_labels:
+            return None
+        return tuple(nat.index(d) for d in self.out_labels)
+
+    @property
+    def is_plain_2d(self) -> bool:
+        """True when the spec IS "mk,kn->mn" up to label names."""
+        return (not self.batch and len(self.x_free) == 1
+                and len(self.y_free) == 1 and len(self.contract) == 1
+                and self.x_labels == (self.x_free[0], self.contract[0])
+                and self.y_labels == (self.contract[0], self.y_free[0])
+                and self.out_perm is None)
+
+
+def _expand_ellipsis(labels: str, ndim: int, spec: str) -> tuple[str, ...]:
+    if "..." not in labels:
+        out = tuple(labels)
+        if len(out) != ndim:
+            raise ValueError(
+                f"spec {spec!r}: operand term {labels!r} has "
+                f"{len(out)} labels for a {ndim}-d operand")
+        return out
+    head, _, tail = labels.partition("...")
+    n_ell = ndim - len(head) - len(tail)
+    if n_ell < 0:
+        raise ValueError(f"spec {spec!r}: {labels!r} over-labels "
+                         f"a {ndim}-d operand")
+    if n_ell > len(_ELL_LABELS):
+        raise ValueError(f"spec {spec!r}: '...' spans {n_ell} dims "
+                         f"(max {len(_ELL_LABELS)})")
+    return tuple(head) + tuple(_ELL_LABELS[:n_ell]) + tuple(tail)
+
+
+@functools.lru_cache(maxsize=None)
+def parse_spec(spec: str, x_ndim: int, y_ndim: int) -> ParsedSpec | None:
+    """Parse a two-operand contraction spec; None when it is not a
+    (batched) GEMM the registry's gemm lowerings can take — the caller
+    then falls back to the general einsum lowering.
+    """
+    s = spec.replace(" ", "")
+    try:
+        lhs, out_s = s.split("->")
+        xs_s, ys_s = lhs.split(",")
+    except ValueError:
+        raise ValueError(f"bad contraction spec {spec!r}; want 'ab,bc->ac'")
+    for term in (xs_s, ys_s):
+        if any(c in _ELL_LABELS for c in term.replace(".", "")):
+            return None   # user labels collide with the ellipsis pool
+    xs = _expand_ellipsis(xs_s, x_ndim, spec)
+    ys = _expand_ellipsis(ys_s, y_ndim, spec)
+    if "..." in out_s:
+        n_ell = max(len(xs) - len(xs_s.replace("...", "")),
+                    len(ys) - len(ys_s.replace("...", "")))
+        head, _, tail = out_s.partition("...")
+        outs = tuple(head) + tuple(_ELL_LABELS[:n_ell]) + tuple(tail)
+    else:
+        outs = tuple(out_s)
+    xset, yset, oset = set(xs), set(ys), set(outs)
+    if (len(xset) != len(xs) or len(yset) != len(ys)
+            or len(oset) != len(outs)):
+        return None   # repeated label within a term (diagonal): not a GEMM
+    if not oset <= (xset | yset):
+        raise ValueError(f"spec {spec!r}: output labels {oset - xset - yset}"
+                         f" appear in no input")
+    # Labels in exactly one input must survive to the output, otherwise the
+    # spec asks for a plain sum-reduction — not GEMM-shaped.
+    if (xset - yset) - oset or (yset - xset) - oset:
+        return None
+    batch = tuple(d for d in xs if d in yset and d in oset)
+    contract = tuple(d for d in xs if d in yset and d not in oset)
+    x_free = tuple(d for d in xs if d not in yset)
+    y_free = tuple(d for d in ys if d not in xset)
+    return ParsedSpec(xs, ys, outs, batch, contract, x_free, y_free)
+
+
+def _sizes(parsed: ParsedSpec, x, y) -> dict[str, int]:
+    sizes: dict[str, int] = {}
+    for labels, arr in ((parsed.x_labels, x), (parsed.y_labels, y)):
+        for d, n in zip(labels, arr.shape):
+            if sizes.setdefault(d, n) != n:
+                raise ValueError(
+                    f"size mismatch for label {d!r}: {sizes[d]} vs {n} "
+                    f"({x.shape} x {y.shape})")
+    return sizes
+
+
+def _prod(ns) -> int:
+    out = 1
+    for n in ns:
+        out *= n
+    return out
+
+
+# ----------------------------------------------------------------------
+# The explicit ACC lifecycle (XLA / ref lowerings; the Pallas kernel
+# implements the same phases inside VMEM scratch — mma_gemm.py)
+# ----------------------------------------------------------------------
+
+class Accumulator:
+    """prime -> rank-k updates -> deprime, at matrix granularity.
+
+    Mirrors the architected accumulator lifecycle: ``prime`` is
+    ``xxsetaccz`` or the accumulate-form seed, each ``update`` is one
+    rank-k ``xv*ger*`` pass, and ``deprime`` is the single store through
+    the results bus — where the epilogue contract and the quant
+    :class:`Dequant` rescale plug in.
+    """
+
+    def __init__(self, pol: precision.GerPolicy):
+        self.pol = pol
+        self.value = None
+
+    def prime(self, c=None, *, beta: float = 1.0, neg_acc: bool = False):
+        if c is None:
+            self.value = None       # lazy zeros: first update sets it
+            return self
+        v = c.astype(self.pol.acc_dtype)
+        if beta != 1.0:
+            v = v * jnp.asarray(beta, self.pol.acc_dtype)
+        self.value = -v if neg_acc else v
+        return self
+
+    def update(self, x, y, dnums=(((1,), (0,)), ((), ())), *,
+               neg_product: bool = False):
+        """acc <- acc [-] X @ Y, accumulating in the family's acc dtype."""
+        if jnp.issubdtype(self.pol.acc_dtype, jnp.integer):
+            x = x.astype(jnp.int32)
+            y = y.astype(jnp.int32)
+        prod = lax.dot_general(
+            x, y, dnums,
+            preferred_element_type=self.pol.acc_dtype).astype(
+                self.pol.acc_dtype)
+        if neg_product:
+            prod = -prod
+        self.value = prod if self.value is None else prod + self.value
+        return self
+
+    def deprime(self, *, alpha: float = 1.0, epilogue=None, bias=None,
+                residual=None, out_dtype=None):
+        from repro.kernels import epilogue as _epilogue
+        out = self.value
+        if alpha != 1.0:
+            out = out * jnp.asarray(alpha, out.dtype)
+        out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
+        return out.astype(out_dtype) if out_dtype is not None else out
+
+
+@dataclasses.dataclass
+class Dequant:
+    """Deprime-stage rescale turning an int32 ``I8GER4`` accumulator into
+    floating point — the W8A8 zero-point form used by ``quant.qdot``:
+
+        out = row_scale * (acc - row_zp * col_sum) * col_scale
+
+    Applied by ``execute`` on the accumulator-dtype matrix in output
+    orientation, shared verbatim by every backend, so cross-backend
+    equivalence of the quant path reduces to the exactness of the int32
+    ger itself.
+    """
+
+    row_scale: jnp.ndarray    # (M, 1) activation scales
+    row_zp: jnp.ndarray       # (M, 1) activation zero points
+    col_sum: jnp.ndarray      # (N,)  weight column sums (int32 -> fp32)
+    col_scale: jnp.ndarray    # (1, N) or (N,) weight scales
+
+    def apply(self, acc):
+        out = acc.astype(jnp.float32)
+        out = self.row_scale * out \
+            - (self.row_scale * self.row_zp) * self.col_sum[None, :]
+        return out * self.col_scale
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+_REGISTRY: dict[tuple, object] = {}
+_EXPANSIONS: dict[Ger, tuple[Ger, object]] = {}
+
+BACKENDS = ("pallas", "xla", "ref")
+
+
+def register(backend: str, op_class: str, *, ger: Ger | None = None,
+             fused: bool | None = None):
+    """Decorator: register a lowering for ``(backend, op_class[, ger,
+    fused])``.  ``None`` wildcards match any family / fusion state."""
+
+    def deco(fn):
+        _REGISTRY[(backend, op_class, ger, fused)] = fn
+        return fn
+    return deco
+
+
+def lookup(backend: str, op_class: str, ger: Ger, fused: bool):
+    """Most-specific-first lookup with wildcard fallbacks."""
+    for key in ((backend, op_class, ger, fused),
+                (backend, op_class, ger, None),
+                (backend, op_class, None, fused),
+                (backend, op_class, None, None)):
+        fn = _REGISTRY.get(key)
+        if fn is not None:
+            return fn
+    return None
+
+
+def backends_for(op_class: str, ger: Ger, fused: bool = False) -> list[str]:
+    """Which backends can lower this key (cross-backend test surface)."""
+    return [b for b in BACKENDS if lookup(b, op_class, ger, fused)]
+
+
+def register_expansion(ger: Ger, rep: Ger):
+    """Register a pre-processing hook rewriting one ``ger`` pass into a
+    chain of passes over the same resident accumulator.  ``rep`` is the
+    family the chained passes run as (used for block autotuning)."""
+
+    def deco(fn):
+        _EXPANSIONS[ger] = (rep, fn)
+        return fn
+    return deco
+
+
+def expansion_for(ger: Ger):
+    return _EXPANSIONS.get(ger)
+
+
+@register_expansion(Ger.F32GER_3XBF16, Ger.BF16GER2)
+def _expand_f32_3xbf16(x, y):
+    """fp32 operands emulated on the MXU: split hi/lo bf16 and chain
+    hi*hi + hi*lo + lo*hi rank-k passes (xvbf16ger2pp chaining)."""
+
+    def split(v):
+        v = v.astype(jnp.float32)
+        hi = v.astype(jnp.bfloat16)
+        lo = (v - hi.astype(jnp.float32)).astype(jnp.bfloat16)
+        return hi, lo
+
+    xh, xl = split(x)
+    yh, yl = split(y)
+    return [(xh, yh, Ger.BF16GER2), (xh, yl, Ger.BF16GER2),
+            (xl, yh, Ger.BF16GER2)]
+
+
+def _passes(ger: Ger, x, y):
+    hook = _EXPANSIONS.get(ger)
+    if hook is None:
+        return [(x, y, ger)]
+    return hook[1](x, y)
+
+
+def rep_kind(ger: Ger) -> Ger:
+    """The family whose policy governs blocks/tolerances after expansion."""
+    hook = _EXPANSIONS.get(ger)
+    return ger if hook is None else hook[0]
+
+
+def resolve_block(kind: Ger, m: int, n: int, k: int,
+                  block: tuple[int, int, int] | None,
+                  epilogue_key: str = "none"):
+    """Dispatch-time autotune-cache consult (outside jit, so later tuning
+    is picked up on the next call instead of being frozen into a trace).
+    Explicit ``block`` wins; then a cached winner; else None ->
+    ``tiling.choose_blocks`` inside the kernel."""
+    if block is not None:
+        return block
+    from repro.core import autotune as _autotune
+    cfg = _autotune.lookup(rep_kind(kind), m, n, k, epilogue_key)
+    return (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else None
+
+
+# ----------------------------------------------------------------------
+# Resolved op: everything a lowering needs
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Op:
+    """One fully-resolved contract invocation handed to a lowering."""
+
+    x: jnp.ndarray
+    y: jnp.ndarray
+    acc: jnp.ndarray | None
+    bias: jnp.ndarray | None
+    residual: jnp.ndarray | None
+    parsed: ParsedSpec | None
+    spec: str
+    ger: Ger
+    pol: precision.GerPolicy
+    out_dtype: object             # final dtype for THIS lowering call
+    epilogue: object              # Epilogue (never None; identity allowed)
+    block: tuple | None
+    interpret: bool
+    neg_product: bool
+    neg_acc: bool
+    alpha: float
+    beta: float
+
+    @property
+    def fused(self) -> bool:
+        return not self.epilogue.is_identity
+
+    @property
+    def has_forms(self) -> bool:
+        return (self.neg_product or self.neg_acc
+                or self.alpha != 1.0 or self.beta != 1.0)
+
+    def to_batched_2d(self):
+        """Normalize operands to ``(B, M, K) x (B, K, N)`` (B omitted when
+        there are no batch labels).  Returns (x2, y2, (b, m, n, k),
+        assemble) where ``assemble`` maps the (B?, M, N) result back to
+        the spec's output shape/order."""
+        p = self.parsed
+        x, y = self.x, self.y
+        sizes = _sizes(p, x, y)
+        bshape = tuple(sizes[d] for d in p.batch)
+        mshape = tuple(sizes[d] for d in p.x_free)
+        nshape = tuple(sizes[d] for d in p.y_free)
+        kshape = tuple(sizes[d] for d in p.contract)
+        b, m, n, k = (_prod(bshape), _prod(mshape), _prod(nshape),
+                      _prod(kshape))
+
+        def arrange(arr, labels, order):
+            perm = tuple(labels.index(d) for d in order)
+            if perm != tuple(range(len(perm))):
+                arr = jnp.transpose(arr, perm)
+            return arr
+
+        x2 = arrange(x, p.x_labels, p.batch + p.x_free + p.contract)
+        y2 = arrange(y, p.y_labels, p.batch + p.contract + p.y_free)
+        batched = bool(p.batch)
+        if batched:
+            x2 = x2.reshape(b, m, k)
+            y2 = y2.reshape(b, k, n)
+        else:
+            x2 = x2.reshape(m, k)
+            y2 = y2.reshape(k, n)
+
+        def assemble(out):
+            out = out.reshape(bshape + mshape + nshape)
+            # out_perm permutes *labels*; grouped label blocks may span
+            # several axes, so rebuild the axis permutation label-wise.
+            if p.out_perm is not None:
+                axis_of = {d: i for i, d in enumerate(p.natural_out)}
+                out = jnp.transpose(
+                    out, tuple(axis_of[d] for d in p.out_labels))
+            return out
+
+        return x2, y2, (b if batched else None, m, n, k), assemble
+
+
+def _combine_expanded(op: Op, prod, acc_seed, residual):
+    """Shared tail of a multi-pass expansion chain: apply the accumulate
+    forms to the chained product, then deprime once.  ``acc_seed`` and
+    ``residual`` arrive already normalized to the backend's layout."""
+    acc = Accumulator(op.pol)
+    acc.value = -prod if op.neg_product else prod
+    if acc_seed is not None:
+        seed = acc_seed.astype(prod.dtype)
+        if op.beta != 1.0:
+            seed = seed * jnp.asarray(op.beta, prod.dtype)
+        acc.value = acc.value + (-seed if op.neg_acc else seed)
+    return acc.deprime(alpha=op.alpha, epilogue=op.epilogue, bias=op.bias,
+                       residual=residual, out_dtype=op.out_dtype)
+
+
+# ----------------------------------------------------------------------
+# Built-in lowerings
+# ----------------------------------------------------------------------
+# The jit'd impls take operands positionally (None allowed) and all static
+# configuration by keyword, exactly like the former ops._mma_dot*_impl
+# pair, so fused and unfused calls share one trace shape and remain
+# bit-for-bit comparable under an outer jit (tests/test_epilogue.py).
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "block", "interpret", "out_dtype", "epilogue", "neg_product",
+    "neg_acc", "alpha", "beta"))
+def _pallas_gemm_impl(x, y, c, bias, residual, *, kind, block, interpret,
+                      out_dtype, epilogue, neg_product, neg_acc, alpha,
+                      beta):
+    from repro.kernels import mma_gemm as _gemm
+    pol = precision.policy(kind)
+    x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
+    y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
+    ep = epilogue if epilogue is not None and not epilogue.is_identity \
+        else None
+    return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
+                          neg_product=neg_product, neg_acc=neg_acc,
+                          alpha=alpha, beta=beta,
+                          ep=ep, bias=bias, residual=residual,
+                          out_dtype=out_dtype, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "dnums", "out_perm", "out_dtype", "epilogue", "neg_product",
+    "neg_acc", "alpha", "beta"))
+def _xla_gemm_impl(x, y, c, bias, residual, *, kind, dnums, out_perm,
+                   out_dtype, epilogue, neg_product, neg_acc, alpha, beta):
+    """One shardable dot_general + the explicit ACC lifecycle."""
+    pol = precision.policy(kind)
+    if pol.packed_int4:
+        from repro.kernels import mma_gemm as _gemm
+        x = _gemm._unpack_int4(x, axis=dnums[0][0][0])
+        y = _gemm._unpack_int4(y, axis=dnums[0][1][0])
+    else:
+        x = x.astype(pol.x_dtype)
+        y = y.astype(pol.y_dtype)
+    acc = Accumulator(pol)
+    acc.prime(c, beta=beta, neg_acc=neg_acc)
+    acc.update(x, y, dnums, neg_product=neg_product)
+    if out_perm is not None:
+        # values are perm-invariant; reorder before the (last-dim
+        # broadcast) epilogue operands attach
+        acc.value = jnp.transpose(acc.value, out_perm)
+    return acc.deprime(alpha=alpha, epilogue=epilogue, bias=bias,
+                       residual=residual, out_dtype=out_dtype)
+
+
+@register("pallas", "gemm")
+def _lower_pallas_gemm(op: Op):
+    x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
+    pack = 2 if op.pol.packed_int4 else 1
+    block = resolve_block(op.ger, m, n, k * pack, op.block,
+                          op.epilogue.key)
+    passes = _passes(op.ger, x2, y2)
+
+    res2 = (op.residual.reshape(m, n)
+            if op.residual is not None and b is None else op.residual)
+    # acc arrives in the spec's output shape; the kernel wants (M, N)
+    acc2 = (op.acc.reshape(m, n)
+            if op.acc is not None and b is None else op.acc)
+
+    def one(kind, xi, yi, c, ep, out_dtype, *, forms=True):
+        fn = functools.partial(
+            _pallas_gemm_impl, kind=kind, block=block,
+            interpret=op.interpret, out_dtype=out_dtype, epilogue=ep,
+            neg_product=op.neg_product and forms,
+            neg_acc=op.neg_acc and forms,
+            alpha=op.alpha if forms else 1.0,
+            beta=op.beta if forms else 1.0)
+        use_ep = ep is not None and not ep.is_identity
+        if b is None:
+            return fn(xi, yi, c, op.bias if use_ep else None,
+                      res2 if use_ep else None)
+        if c is None:
+            return jax.vmap(lambda a, bb: fn(a, bb, None, None, None))(
+                xi, yi)
+        return jax.vmap(lambda a, bb, cc: fn(a, bb, cc, None, None))(
+            xi, yi, c)
+
+    if b is not None and (op.acc is not None or op.fused):
+        raise ValueError(
+            f"batched contraction {op.spec!r} does not take an accumulator "
+            f"input or a fused epilogue")
+
+    if len(passes) == 1:
+        xi, yi, kind = passes[0]
+        out = one(kind, xi, yi, acc2, op.epilogue, op.out_dtype)
+        return assemble(out)
+
+    # Expansion chain (e.g. F32GER_3XBF16): the product accumulates across
+    # passes in one resident accumulator; accumulate forms and the fused
+    # epilogue then apply once, at deprime, on the chained product.
+    identity_ep = type(op.epilogue)()
+    if not op.fused and not op.has_forms:
+        out = acc2       # plain: the C seed primes the first pass
+        for xi, yi, kind in passes:
+            out = one(kind, xi, yi, out, identity_ep, None, forms=False)
+        return assemble(out.astype(op.out_dtype)
+                        if op.out_dtype is not None else out)
+    prod = None
+    for xi, yi, kind in passes:
+        prod = one(kind, xi, yi, prod, identity_ep, None, forms=False)
+    return assemble(_combine_expanded(op, prod, acc2, res2))
+
+
+@register("xla", "gemm")
+def _lower_xla_gemm(op: Op):
+    """SPMD path: no normalization — batch labels become dot_general batch
+    dims on the original operands, so the partitioner sees the same
+    contraction ``jnp.einsum`` would have built and shards it unchanged."""
+    p = op.parsed
+    _sizes(p, op.x, op.y)     # label-consistency check
+    passes = _passes(op.ger, op.x, op.y)
+    if len(passes) == 1:
+        xi, yi, kind = passes[0]
+        return _xla_gemm_impl(
+            xi, yi, op.acc, op.bias, op.residual, kind=kind,
+            dnums=p.dnums, out_perm=p.out_perm, out_dtype=op.out_dtype,
+            epilogue=op.epilogue, neg_product=op.neg_product,
+            neg_acc=op.neg_acc, alpha=op.alpha, beta=op.beta)
+
+    identity_ep = type(op.epilogue)()
+
+    def plain(kind, xi, yi, c):
+        return _xla_gemm_impl(
+            xi, yi, c, None, None, kind=kind, dnums=p.dnums,
+            out_perm=None, out_dtype=None, epilogue=identity_ep,
+            neg_product=False, neg_acc=False, alpha=1.0, beta=1.0)
+
+    if not op.fused and not op.has_forms:
+        out = op.acc
+        for xi, yi, kind in passes:
+            out = plain(kind, xi, yi, out)
+        if p.out_perm is not None:
+            out = jnp.transpose(out, p.out_perm)
+        return out.astype(op.out_dtype) if op.out_dtype is not None else out
+    prod = None
+    for xi, yi, kind in passes:
+        prod = plain(kind, xi, yi, prod)
+    # out_perm is None here (execute rejects fused/acc + permuted output)
+    return _combine_expanded(op, prod, op.acc, op.residual)
+
+
+@register("ref", "gemm")
+def _lower_ref_gemm(op: Op):
+    """Eager architected oracle: per-batch-element ref.ger, the ground
+    truth the other backends are tested against."""
+    from repro.kernels import ref as _ref
+    x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
+    if b is not None and (op.acc is not None or op.fused):
+        raise ValueError(
+            f"batched contraction {op.spec!r} does not take an accumulator "
+            f"input or a fused epilogue")
+    res2 = (op.residual.reshape(m, n)
+            if op.residual is not None and b is None else op.residual)
+    acc2 = (op.acc.reshape(m, n)
+            if op.acc is not None and b is None else op.acc)
+    passes = _passes(op.ger, x2, y2)
+
+    def cast(v, want, pol):
+        return v if pol.packed_int4 else v.astype(want)
+
+    def ger2d(xi, yi, kind, c):
+        pol = precision.policy(kind)
+        return _ref.ger(cast(xi, pol.x_dtype, pol),
+                        cast(yi, pol.y_dtype, pol), kind, acc=c)
+
+    def chain(xi, yi, kind, c):
+        if b is None:
+            return ger2d(xi, yi, kind, c)
+        return jnp.stack([ger2d(xi[i], yi[i], kind, None)
+                          for i in range(b)])
+
+    if not op.fused and not op.has_forms and len(passes) == 1:
+        xi, yi, kind = passes[0]
+        pol = precision.policy(kind)
+        if b is None and acc2 is None:
+            out = _ref.ger(cast(xi, pol.x_dtype, pol),
+                           cast(yi, pol.y_dtype, pol), kind,
+                           neg_product=op.neg_product)
+        else:
+            out = chain(xi, yi, kind, acc2)
+        return assemble(out.astype(op.out_dtype)
+                        if op.out_dtype is not None else out)
+
+    prod = None
+    for xi, yi, kind in passes:
+        prod = chain(xi, yi, kind, prod)
+    return assemble(_combine_expanded(op, prod, acc2, res2))
+
+
+# ---- saturating accumulate forms (xvi16ger2s / xvi8ger4spp) ----------
+
+@register("xla", "gemm.saturating")
+def _lower_xla_saturating(op: Op):
+    """Clamped rank-r accumulation as a lax.scan over K groups (VPU path —
+    saturating integer accumulate has no MXU analogue; DESIGN.md)."""
+    pol = op.pol
+    if not jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        raise ValueError("saturating forms are integer-only")
+    x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
+    if b is not None:
+        raise ValueError("saturating forms are 2-D only")
+    r = pol.arch_rank
+    assert k % r == 0, (k, r)
+    i32max = jnp.int32(jnp.iinfo(jnp.int32).max)
+    i32min = jnp.int32(jnp.iinfo(jnp.int32).min)
+    # One architected rank-r product group cannot overflow int32
+    # (2 * 32767^2 < 2^31 - 1 for int16; 4 * 127 * 255 for int8), so group
+    # products are exact in int32; only the accumulate saturates.
+    xg = x2.reshape(m, k // r, r).swapaxes(0, 1).astype(jnp.int32)
+    yg = y2.reshape(k // r, r, n).astype(jnp.int32)
+
+    def step(a, xy):
+        xs, ys = xy
+        p = lax.dot_general(xs, ys, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+        s = a + p  # wraps (two's complement) — detect and saturate
+        overflow_pos = (p > 0) & (s < a)
+        overflow_neg = (p < 0) & (s > a)
+        s = jnp.where(overflow_pos, i32max, s)
+        s = jnp.where(overflow_neg, i32min, s)
+        return s, None
+
+    init = (jnp.zeros((m, n), jnp.int32) if op.acc is None
+            else op.acc.reshape(m, n).astype(jnp.int32))
+    out, _ = lax.scan(step, init, (xg, yg))
+    return assemble(out.astype(op.out_dtype)
+                    if op.out_dtype is not None else out)
+
+
+@register("ref", "gemm.saturating")
+def _lower_ref_saturating(op: Op):
+    """Independent oracle: exact int64 group sums, clamped per update."""
+    pol = op.pol
+    x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
+    if b is not None:
+        raise ValueError("saturating forms are 2-D only")
+    r = pol.arch_rank
+    assert k % r == 0, (k, r)
+    import numpy as np
+    x64 = np.asarray(x2).astype(np.int64)
+    y64 = np.asarray(y2).astype(np.int64)
+    acc = (np.zeros((m, n), np.int64) if op.acc is None
+           else np.asarray(op.acc).reshape(m, n).astype(np.int64))
+    for g in range(k // r):
+        p = x64[:, g * r:(g + 1) * r] @ y64[g * r:(g + 1) * r, :]
+        acc = np.clip(acc + p, np.iinfo(np.int32).min,
+                      np.iinfo(np.int32).max)
+    out = jnp.asarray(acc.astype(np.int32))
+    return assemble(out.astype(op.out_dtype)
+                    if op.out_dtype is not None else out)
+
+
+# ---- general einsum fallback -----------------------------------------
+
+@register("xla", "einsum")
+def _lower_xla_einsum(op: Op):
+    """Specs the GEMM normalizer rejects (diagonals, sum-reductions):
+    policy-cast inputs, high-precision accumulation, one einsum."""
+    pol = op.pol
+    if op.acc is not None or op.fused or op.has_forms:
+        raise ValueError(
+            f"spec {op.spec!r} is not GEMM-shaped; accumulate forms and "
+            f"fused epilogues need a gemm-class contraction")
+    x = op.x if pol.packed_int4 else op.x.astype(pol.x_dtype)
+    y = op.y if pol.packed_int4 else op.y.astype(pol.y_dtype)
+    out = jnp.einsum(op.spec, x, y, preferred_element_type=pol.acc_dtype)
+    return out.astype(op.out_dtype) if op.out_dtype is not None else out
+
+
+_REGISTRY[("ref", "einsum", None, None)] = _lower_xla_einsum
+
+
+# ----------------------------------------------------------------------
+# The driver
+# ----------------------------------------------------------------------
+
+def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
+            bias=None, residual=None, dequant: Dequant | None = None):
+    """Resolve ``plan`` against ``cfg``, pick a lowering, run it.
+
+    This is the body of ``facility.contract`` — kept here so the facility
+    module stays the thin architected surface.
+    """
+    from repro.kernels import epilogue as _epilogue
+
+    plan = plan or Plan()
+    ger = plan.ger or cfg.ger
+    pol = precision.policy(ger)
+    if isinstance(plan.out_dtype, str) and plan.out_dtype == ACC:
+        out_dtype = pol.acc_dtype
+    else:
+        out_dtype = plan.out_dtype or cfg.out_dtype
+    backend = plan.backend or ("pallas" if cfg.use_pallas else "xla")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    interpret = cfg.interpret if plan.interpret is None else plan.interpret
+
+    ep = plan.epilogue
+    if ep is None:
+        ep = _epilogue.make(bias=bias, residual=residual)
+    ep.validate(pol.acc_dtype, bias=bias, residual=residual)
+
+    parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
+    op_class = "gemm.saturating" if plan.saturating else (
+        "gemm" if parsed is not None else "einsum")
+    if dequant is not None and not ep.is_identity:
+        raise ValueError("dequant and a fused epilogue are exclusive")
+    if (parsed is not None and parsed.out_perm is not None
+            and (acc is not None or not ep.is_identity)):
+        raise ValueError(
+            f"spec {spec!r} permutes the natural output order; accumulator "
+            f"inputs and fused epilogues require the natural "
+            f"(batch..., m..., n...) output")
+    if plan.saturating and (not ep.is_identity or plan.neg_product
+                            or plan.neg_acc or plan.alpha != 1.0
+                            or plan.beta != 1.0 or dequant is not None):
+        raise ValueError(
+            "saturating forms take an accumulator seed only — no fused "
+            "epilogue, dequant, or alpha/beta/neg accumulate forms "
+            "(xvi16ger2s-class instructions have no such variants)")
+
+    fn = lookup(backend, op_class, ger, not ep.is_identity)
+    if fn is None and backend == "pallas":
+        # e.g. saturating forms (no MXU analogue) or general einsum specs:
+        # fall back to the shardable XLA lowering.
+        backend = "xla"
+        fn = lookup(backend, op_class, ger, not ep.is_identity)
+    if fn is None:
+        raise NotImplementedError(
+            f"no lowering registered for ({backend!r}, {op_class!r}, "
+            f"{ger}, fused={not ep.is_identity})")
+
+    lowering_out_dtype = None if dequant is not None else out_dtype
+    op = Op(x=x, y=y, acc=acc, bias=bias, residual=residual, parsed=parsed,
+            spec=spec, ger=ger, pol=pol, out_dtype=lowering_out_dtype,
+            epilogue=ep, block=plan.block, interpret=interpret,
+            neg_product=plan.neg_product, neg_acc=plan.neg_acc,
+            alpha=plan.alpha, beta=plan.beta)
+    DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
+    out = fn(op)
+    if dequant is not None:
+        out = dequant.apply(out)
+        out = out.astype(out_dtype) if out_dtype is not None else out
+    return out
+
+
+def deprecated_shim(old: str, replacement: str):
+    """Emit the facility-migration DeprecationWarning for a legacy entry
+    point.  stacklevel=3 attributes the warning to the shim's *caller*, so
+    the tier-1 filter (tests/conftest.py) escalates in-repo callers to
+    errors while external/test callers only see the warning."""
+    warnings.warn(
+        f"{old} is deprecated; use facility.contract — e.g. {replacement}",
+        DeprecationWarning, stacklevel=3)

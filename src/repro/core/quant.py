@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import facility, lowering
 from repro.core.precision import Ger
-from repro.kernels import ref
 
 
 def quantize_weight(w: jnp.ndarray):
@@ -37,20 +37,27 @@ def quantize_act_u8(x: jnp.ndarray):
 
 
 def qdot(x: jnp.ndarray, wq: jnp.ndarray, wscale: jnp.ndarray,
-         out_dtype=jnp.float32):
+         out_dtype=jnp.float32, *, backend: str | None = None):
     """Quantized matmul: fp activations x int8 weights -> fp.
 
     x: (M, K) fp; wq: (K, N) int8.  Activations are quantized per-row to
-    uint8 (zero-point form), the int32 ger runs on the xvi8ger4 path, and
-    the zero-point correction uses the weight column sums.
+    uint8 (zero-point form), then the whole thing is ONE ``I8GER4`` plan
+    through ``facility.contract``: the spec ``"kn,mk->mn"`` puts the
+    signed weights on the X (int8) operand and the unsigned activations on
+    the Y (uint8) operand — the paper's signed x unsigned asymmetry — and
+    the zero-point/scale correction rides the deprime stage as a
+    :class:`~repro.core.lowering.Dequant` rescale of the int32
+    accumulator (x ≈ (q - zp) * xs  ->  x @ w = xs * (q @ w) - xs * zp *
+    colsum(w), then per-column weight scales).
     """
     xq, xs, xzp = quantize_act_u8(x.astype(jnp.float32))
-    # int32 accumulation: note operand order (int8 weightsᵀ x uint8 acts)
-    acc = ref.ger(wq.T, xq.T, Ger.I8GER4).T.astype(jnp.float32)  # (M, N)
     wsum = wq.astype(jnp.int32).sum(axis=0).astype(jnp.float32)  # (N,)
-    # x ≈ (q - zp) * xs  ->  x @ w = xs * (q @ w) - xs * zp * colsum(w)
-    out = xs * acc - (xs * xzp) * wsum[None, :]
-    return (out * wscale).astype(out_dtype)
+    dq = lowering.Dequant(row_scale=xs, row_zp=xzp, col_sum=wsum,
+                          col_scale=wscale)
+    return facility.contract(
+        "kn,mk->mn", wq, xq, dequant=dq,
+        plan=lowering.Plan(ger=Ger.I8GER4, out_dtype=out_dtype,
+                           backend=backend))
 
 
 def quantize_params_for_serving(params, min_size: int = 1 << 16):

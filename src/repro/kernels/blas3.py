@@ -19,18 +19,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import facility, lowering
 from repro.core.precision import Ger
-from repro.kernels import ops
 
 
 def _ger(x, y, kind, acc=None, neg_product=False):
-    """Accumulate-form ger through the ops dispatch layer
-    (ops.mma_dot_fused carries the pp/np forms), so trsm/DFT panel updates
-    share its validation and accumulate-form semantics.  The XLA path is
-    used (use_pallas=False): these panels are small and irregular, so they
-    are not autotuned or kernel-lowered."""
-    return ops.mma_dot_fused(x, y, acc, kind=kind, neg_product=neg_product,
-                             use_pallas=False)
+    """Accumulate-form ger through the facility (the registry's ACC
+    lifecycle carries the pp/np forms), so trsm/DFT panel updates share
+    its validation and accumulate-form semantics.  The XLA backend is
+    pinned: these panels are small and irregular, so they are not
+    autotuned or kernel-lowered."""
+    return facility.contract(
+        "mk,kn->mn", x, y, acc=acc,
+        plan=lowering.Plan(ger=kind, neg_product=neg_product,
+                           backend="xla", out_dtype=lowering.ACC))
 
 
 def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,

@@ -15,8 +15,10 @@ Contract (DESIGN.md section 4):
     alpha scale, before the out_dtype cast:
         store(cast(residual + act(bias + alpha * acc)))
   * ``apply`` is the single implementation used by the Pallas kernels
-    (on the VMEM-resident tile) and the XLA/reference path (on the full
-    matrix), so the two paths are bit-identical at fp32.
+    (on the VMEM-resident tile) and by ``lowering.Accumulator.deprime``
+    (the XLA/ref backends, on the full matrix), so every registered
+    lowering is bit-identical at fp32.  The static ``Epilogue`` rides in
+    a ``facility.Plan``; the operands travel as ``contract`` kwargs.
   * bias broadcasts along rows: shape (N,) outside the kernel, a (1, bn)
     block inside.  residual has the output shape.
   * gelu/silu are float-only; integer accumulators admit bias/relu/residual

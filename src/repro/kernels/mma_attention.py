@@ -146,13 +146,22 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def ref_attention(q, k, v, *, causal: bool = True):
-    """Pure-jnp oracle."""
+    """Facility-routed oracle (score/value contractions are architected
+    rank-k updates too; the XLA backend is pinned so the oracle never
+    recurses into the kernel under test)."""
+    from repro.core import facility, precision
+
     d = q.shape[-1]
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * (d ** -0.5)
+    xla32 = facility.Plan(ger=precision.Ger.F32GER, backend="xla",
+                          out_dtype=jnp.float32)
+    s = facility.contract("bqd,bkd->bqk", q.astype(jnp.float32),
+                          k.astype(jnp.float32), plan=xla32) * (d ** -0.5)
     if causal:
         sq, sk = q.shape[1], k.shape[1]
         mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
         s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)
+    return facility.contract(
+        "bqk,bkd->bqd", p.astype(v.dtype), v,
+        plan=facility.Plan(ger=precision.default_ger_for(v.dtype),
+                           backend="xla", out_dtype=q.dtype))

@@ -16,7 +16,8 @@ Maps the paper's POWER10 Matrix Math Engine execution model onto Pallas:
 
 Supported ger kinds (see repro.core.precision): f64 (interpret/VPU), f32,
 bf16, f16, int16 (adapted), int8 x uint8, packed int4.  The beyond-paper
-f32-as-3xbf16 MXU emulation is lowered as three passes in ops.py.
+f32-as-3xbf16 MXU emulation is an expansion hook in the lowering registry
+(core/lowering.py): three chained kernel passes over one accumulator.
 """
 
 from __future__ import annotations
@@ -131,7 +132,10 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
     """
     pol = precision.policy(kind)
     if kind == precision.Ger.F32GER_3XBF16:
-        raise ValueError("F32GER_3XBF16 is lowered in ops.mma_dot")
+        raise ValueError(
+            "F32GER_3XBF16 is a registered expansion hook — lower it "
+            "through facility.contract (core/lowering.py), which chains "
+            "three BF16GER2 kernel passes over one resident accumulator")
     m, k_packed = x.shape
     k2, n = y.shape
     if k_packed != k2:

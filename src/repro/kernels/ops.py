@@ -1,18 +1,13 @@
-"""Public, jit-friendly entry points for the MMA kernels.
+"""Kernel-level entry points — now thin shims over ``facility.contract``.
 
-This is the "built-ins" layer of the paper (section IV): a thin, typed API
-with pre-defined semantics that the rest of the framework programs against,
-while scheduling/allocation is left to the compiler.  Dispatch:
-
-  * ``use_pallas=True``  -> the hand-tiled Pallas kernels (TPU target;
-    ``interpret=True`` executes them on CPU for validation).
-  * ``use_pallas=False`` -> an XLA `dot_general` with the same ger policy
-    (dtypes + preferred accumulation type).  On TPU, XLA lowers this to the
-    same MXU rank-k-update loop; this path is what the full models use under
-    jit/pjit so that SPMD partitioning sees a plain einsum it can shard.
-
-Both paths implement identical architected semantics and are tested against
-``ref.py``.
+Historically this module owned the dispatch logic (pallas-vs-XLA switch,
+autotune-cache consult, the F32GER_3XBF16 three-pass split).  All of that
+moved into the lowering registry (``repro.core.lowering``): ``mma_dot`` /
+``mma_dot_fused`` survive as deprecated shims so existing callers and the
+tier-1 suite keep working, while in-repo code calls ``facility.contract``
+directly.  ``mma_pm_dot`` (prefixed masked forms), ``mma_ger_saturating``
+(clamped accumulate forms) and ``mma_conv2d`` (SCONV) remain the supported
+kernel-level builtins for the operations ``contract`` specs do not name.
 """
 
 from __future__ import annotations
@@ -21,55 +16,42 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import autotune as _autotune
-from repro.core import precision
+from repro.core import facility, lowering, precision
 from repro.kernels import epilogue as _epilogue
-from repro.kernels import mma_gemm as _gemm
 from repro.kernels import mma_conv as _conv
 from repro.kernels import ref as _ref
 
 Ger = precision.Ger
 Epilogue = _epilogue.Epilogue
 
-
-def _split_bf16(v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    hi = v.astype(jnp.bfloat16)
-    lo = (v - hi.astype(jnp.float32)).astype(jnp.bfloat16)
-    return hi, lo
+_GEMM = "mk,kn->mn"
 
 
 def _resolve_block(x, y, kind: Ger,
                    block: tuple[int, int, int] | None,
                    epilogue_key: str = "none",
                    use_pallas: bool = True):
-    """Dispatch-time autotune-cache consult (outside jit, so later tuning
-    is picked up on the next call instead of being frozen into a trace).
-
-    Explicit ``block`` wins; then a cached autotune winner for this
-    (kind, M, N, K, epilogue, backend); else None -> ``choose_blocks``.
-    """
+    """Dispatch-time autotune-cache consult (delegates to the registry's
+    resolver; kept here because external tooling pokes at it)."""
     if block is not None or not use_pallas:
         return block
     pack = 2 if precision.policy(kind).packed_int4 else 1
     m, k = x.shape[0], x.shape[1] * pack
     n = y.shape[1]
-    cfg = _autotune.lookup(kind, m, n, k, epilogue_key)
-    return (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else None
+    return lowering.resolve_block(kind, m, n, k, None, epilogue_key)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "kind", "block", "use_pallas", "interpret", "out_dtype"))
-def _mma_dot_impl(x, y, c, *, kind, block, use_pallas, interpret, out_dtype):
-    pol = precision.policy(kind)
-    x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
-    y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
-    if use_pallas:
-        return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
-                              out_dtype=out_dtype, interpret=interpret)
-    out = _ref.ger(x, y, kind, acc=c)
-    return out.astype(out_dtype) if out_dtype else out
+def _plan(kind, block, use_pallas, interpret, out_dtype, *,
+          epilogue=None, neg_product=False, neg_acc=False,
+          alpha=1.0, beta=1.0, saturating=False) -> lowering.Plan:
+    return lowering.Plan(
+        ger=kind, block=block,
+        backend="pallas" if use_pallas else "xla",
+        interpret=interpret,
+        out_dtype=out_dtype if out_dtype is not None else lowering.ACC,
+        epilogue=epilogue, neg_product=neg_product, neg_acc=neg_acc,
+        alpha=alpha, beta=beta, saturating=saturating)
 
 
 def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
@@ -78,62 +60,18 @@ def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
             block: tuple[int, int, int] | None = None,
             use_pallas: bool = True, interpret: bool = True,
             out_dtype=None) -> jnp.ndarray:
-    """``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N).
+    """Deprecated: ``facility.contract("mk,kn->mn", x, y, acc=c,
+    plan=Plan(ger=kind, ...))``.
 
-    When ``block`` is None the autotune cache is consulted first
-    (repro.core.autotune); the ``choose_blocks`` heuristic is the fallback.
+    ``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N).  When
+    ``block`` is None the autotune cache is consulted by the registry.
     """
-    if kind == Ger.F32GER_3XBF16:
-        # Beyond-paper: fp32 on the MXU as three bf16 rank-k passes
-        # (hi*hi + hi*lo + lo*hi); the fp32 accumulator tile is resident
-        # across all three, mirroring the accumulate-form chaining of
-        # xvbf16ger2pp instructions.
-        xh, xl = _split_bf16(x.astype(jnp.float32))
-        yh, yl = _split_bf16(y.astype(jnp.float32))
-        out = mma_dot(xh, yh, c, kind=Ger.BF16GER2, block=block,
-                      use_pallas=use_pallas, interpret=interpret)
-        out = mma_dot(xh, yl, out, kind=Ger.BF16GER2, block=block,
-                      use_pallas=use_pallas, interpret=interpret)
-        out = mma_dot(xl, yh, out, kind=Ger.BF16GER2, block=block,
-                      use_pallas=use_pallas, interpret=interpret)
-        return out.astype(out_dtype or jnp.float32)
-
-    block = _resolve_block(x, y, kind, block, use_pallas=use_pallas)
-    return _mma_dot_impl(x, y, c, kind=kind, block=block,
-                         use_pallas=use_pallas, interpret=interpret,
-                         out_dtype=out_dtype)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "kind", "epilogue", "block", "use_pallas", "interpret", "out_dtype",
-    "neg_product", "neg_acc", "alpha", "beta"))
-def _mma_dot_fused_impl(x, y, c, bias, residual, *, kind, epilogue, block,
-                        use_pallas, interpret, out_dtype, neg_product,
-                        neg_acc, alpha, beta):
-    pol = precision.policy(kind)
-    x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
-    y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
-    if use_pallas:
-        return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
-                              neg_product=neg_product, neg_acc=neg_acc,
-                              alpha=alpha, beta=beta,
-                              ep=epilogue, bias=bias, residual=residual,
-                              out_dtype=out_dtype, interpret=interpret)
-    # XLA path: identical architected semantics, same epilogue helper on
-    # the accumulator-dtype matrix (bit-identical at fp32 under jit).
-    # beta scales in acc dtype, matching the kernel's prime step order
-    # (cast first, then scale) so bf16 c inputs round identically.
-    acc_in = None
-    if c is not None:
-        acc_in = c.astype(pol.acc_dtype)
-        if beta != 1.0:
-            acc_in = acc_in * jnp.asarray(beta, pol.acc_dtype)
-    out = _ref.ger(x, y, kind, acc=acc_in, neg_product=neg_product,
-                   neg_acc=neg_acc)
-    if alpha != 1.0:
-        out = out * jnp.asarray(alpha, out.dtype)
-    out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
-    return out.astype(out_dtype) if out_dtype else out
+    lowering.deprecated_shim(
+        "ops.mma_dot", 'contract("mk,kn->mn", x, y, acc=c, '
+        "plan=Plan(ger=kind, backend=..., block=...))")
+    return facility.contract(
+        _GEMM, x, y, acc=c,
+        plan=_plan(kind, block, use_pallas, interpret, out_dtype))
 
 
 def mma_dot_fused(x: jnp.ndarray, y: jnp.ndarray,
@@ -147,47 +85,22 @@ def mma_dot_fused(x: jnp.ndarray, y: jnp.ndarray,
                   neg_product: bool = False, neg_acc: bool = False,
                   alpha: float = 1.0, beta: float = 1.0,
                   out_dtype=None) -> jnp.ndarray:
-    """``mma_dot`` with the fused epilogue contract (epilogue.py).
+    """Deprecated: ``facility.contract`` with an epilogue-carrying Plan.
 
-    Pallas path: bias/activation/residual are applied inside the final
-    k-step store, so the accumulator makes no extra HBM round trip.  XLA
-    path: same semantics via the shared ``epilogue.apply`` on the
-    accumulator matrix.  Both match the unfused ``mma_dot`` + jnp epilogue
-    bit-for-bit at fp32 (tests/test_epilogue.py).
+    ``mma_dot`` with the fused epilogue contract (epilogue.py) and the
+    pp/np/pn/nn accumulate forms — both now owned by the registry's ACC
+    lifecycle (prime/update/deprime).
     """
+    lowering.deprecated_shim(
+        "ops.mma_dot_fused", 'contract("mk,kn->mn", x, y, acc=c, '
+        "plan=Plan(ger=kind, epilogue=ep, alpha=..., beta=...), "
+        "bias=..., residual=...)")
     epilogue = epilogue or _epilogue.make(bias=bias, residual=residual)
-    if epilogue.is_identity and (neg_product or neg_acc or alpha != 1.0
-                                 or beta != 1.0):
-        pass  # accumulate-form passthrough still needs the fused impl
-    elif epilogue.is_identity:
-        return mma_dot(x, y, c, kind=kind, block=block,
-                       use_pallas=use_pallas, interpret=interpret,
-                       out_dtype=out_dtype)
-    if kind == Ger.F32GER_3XBF16:
-        # Chain the three bf16 passes for the product alone, then apply the
-        # accumulate forms + epilogue on the fp32 result here (the fp32
-        # split is an ops-level lowering; the c term must NOT seed the
-        # chain or neg_product/neg_acc/alpha/beta would be dropped).
-        prod = mma_dot(x, y, None, kind=kind, block=block,
-                       use_pallas=use_pallas, interpret=interpret)
-        out = -prod if neg_product else prod
-        if c is not None:
-            acc = c.astype(out.dtype)
-            if beta != 1.0:
-                acc = acc * jnp.asarray(beta, out.dtype)
-            out = out + (-acc if neg_acc else acc)
-        if alpha != 1.0:
-            out = out * jnp.asarray(alpha, out.dtype)
-        out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
-        return out.astype(out_dtype) if out_dtype else out
-    epilogue.validate(precision.policy(kind).acc_dtype, bias=bias,
-                      residual=residual)
-    block = _resolve_block(x, y, kind, block, epilogue_key=epilogue.key,
-                           use_pallas=use_pallas)
-    return _mma_dot_fused_impl(
-        x, y, c, bias, residual, kind=kind, epilogue=epilogue, block=block,
-        use_pallas=use_pallas, interpret=interpret, out_dtype=out_dtype,
-        neg_product=neg_product, neg_acc=neg_acc, alpha=alpha, beta=beta)
+    return facility.contract(
+        _GEMM, x, y, acc=c, bias=bias, residual=residual,
+        plan=_plan(kind, block, use_pallas, interpret, out_dtype,
+                   epilogue=epilogue, neg_product=neg_product,
+                   neg_acc=neg_acc, alpha=alpha, beta=beta))
 
 
 def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,
@@ -196,39 +109,14 @@ def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,
     """Saturating accumulation forms (xvi16ger2s / xvi8ger4spp).
 
     Architected semantics: each rank-``arch_rank`` update saturates the
-    int32 accumulator instead of wrapping.  Implemented as a fold over
-    rank-sized K groups with clamped adds (VPU path on TPU — saturating
-    integer accumulate has no MXU analogue; documented in DESIGN.md).
+    int32 accumulator instead of wrapping.  Lowered by the registry's
+    ``gemm.saturating`` op-class (clamped ``lax.scan`` on the XLA backend
+    — saturating integer accumulate has no MXU analogue; DESIGN.md).
     """
-    pol = precision.policy(kind)
-    if not jnp.issubdtype(pol.acc_dtype, jnp.integer):
-        raise ValueError("saturating forms are integer-only")
-    m, k = x.shape
-    r = pol.arch_rank
-    assert k % r == 0, (k, r)
-    i32max = jnp.int32(jnp.iinfo(jnp.int32).max)
-    i32min = jnp.int32(jnp.iinfo(jnp.int32).min)
-    # One architected rank-r product group cannot overflow int32
-    # (2 * 32767^2 < 2^31 - 1 for int16; 4 * 127 * 255 for int8), so group
-    # products are exact in int32; only the accumulate saturates.
-    xg = x.reshape(m, k // r, r).swapaxes(0, 1).astype(jnp.int32)
-    yg = y.reshape(k // r, r, y.shape[1]).astype(jnp.int32)
-
-    def step(a, xy):
-        xs, ys = xy
-        p = lax.dot_general(xs, ys, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.int32)
-        s = a + p  # wraps (two's complement) — detect and saturate
-        overflow_pos = (p > 0) & (s < a)
-        overflow_neg = (p < 0) & (s > a)
-        s = jnp.where(overflow_pos, i32max, s)
-        s = jnp.where(overflow_neg, i32min, s)
-        return s, None
-
-    init = (jnp.zeros((m, y.shape[1]), jnp.int32) if acc is None
-            else acc.astype(jnp.int32))
-    out, _ = lax.scan(step, init, (xg, yg))
-    return out
+    return facility.contract(
+        _GEMM, x, y, acc=acc,
+        plan=lowering.Plan(ger=kind, saturating=True, backend="xla",
+                           out_dtype=lowering.ACC))
 
 
 def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
@@ -248,8 +136,9 @@ def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
         xm = xm * pmask.astype(x.dtype)[None, :]
     xz = (x * xm).astype(x.dtype)
     yz = (y * ymask.astype(y.dtype)[None, :]).astype(y.dtype)
-    return mma_dot(xz, yz, acc, kind=kind, use_pallas=use_pallas,
-                   interpret=interpret)
+    return facility.contract(
+        _GEMM, xz, yz, acc=acc,
+        plan=_plan(kind, None, use_pallas, interpret, None))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bf"))

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
+from repro.core.facility import DOT, Plan
+from repro.kernels.epilogue import Epilogue
 from repro.parallel.api import shard
 
 # ----------------------------------------------------------------------
@@ -135,8 +137,8 @@ Q_CHUNK = 1024
 def _attend(q, k, v, q_pos, kv_pos, *, causal, window, valid):
     """One query block against full K/V.  q (B,C,H,D); q_pos (1|B, C)."""
     scale = q.shape[-1] ** -0.5
-    scores = facility.feinsum("bqhd,bkhd->bhqk", q, k,
-                              out_dtype=jnp.float32) * scale
+    scores = facility.contract("bqhd,bkhd->bhqk", q, k,
+                               plan=Plan(out_dtype=jnp.float32)) * scale
     mask = jnp.ones((kv_pos.shape[0], q_pos.shape[-1], kv_pos.shape[-1]),
                     bool)
     if causal:
@@ -147,7 +149,7 @@ def _attend(q, k, v, q_pos, kv_pos, *, causal, window, valid):
         mask &= valid[:, None, :]
     scores = jnp.where(mask[:, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    return facility.feinsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return facility.contract("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
 
 
 def sdpa(q, k, v, *, causal, window=None, q_offset=0, kv_positions=None,
@@ -195,16 +197,19 @@ def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
 
     cross_x: keys/values come from the encoder stream (whisper decoder).
     ``residual`` is fused into the output projection's deprime store
-    (facility.fdot_fused), saving the separate elementwise read-add pass.
+    (epilogue-carrying contract Plan), saving the separate elementwise
+    read-add pass.
     Returns (out, (k, v)) so callers can build KV caches.
     """
     b, s, d = x.shape
     h, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = facility.fdot(x, p["wq"]).reshape(b, s, h, hd)
+    q = facility.contract(DOT, x, p["wq"]).reshape(b, s, h, hd)
     src = cross_x if cross_x is not None else x
     if kv is None:
-        k = facility.fdot(src, p["wk"]).reshape(b, src.shape[1], nkv, hd)
-        v = facility.fdot(src, p["wv"]).reshape(b, src.shape[1], nkv, hd)
+        k = facility.contract(DOT, src, p["wk"]).reshape(
+            b, src.shape[1], nkv, hd)
+        v = facility.contract(DOT, src, p["wv"]).reshape(
+            b, src.shape[1], nkv, hd)
     else:
         k, v = kv
     if cos_sin is not None:
@@ -222,8 +227,8 @@ def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
     causal = cfg.causal if causal is None else causal
     out = sdpa(q, kq, vq, causal=causal, window=window, q_offset=q_offset,
                kv_positions=kv_positions, valid=valid)
-    out = facility.fdot_fused(out.reshape(b, s, h * hd), p["wo"],
-                              residual=residual)
+    out = facility.contract(DOT, out.reshape(b, s, h * hd), p["wo"],
+                            residual=residual)
     return out, (k, v)
 
 
@@ -250,15 +255,16 @@ def mlp_axes(cfg, gated=None):
 
 
 def apply_mlp(p, x, cfg, residual=None):
-    """MLP with both epilogues fused (facility.fdot_fused): the activation
+    """MLP with both epilogues fused (epilogue-carrying Plans): the activation
     rides the w1 GEMM's deprime store — computed on the fp32 accumulator,
     not the cast-down activation dtype — and the block residual rides the
     w2 GEMM's, so neither intermediate makes an extra HBM round trip."""
-    h = facility.fdot_fused(x, p["w1"], activation=cfg.act)
+    h = facility.contract(DOT, x, p["w1"],
+                          plan=Plan(epilogue=Epilogue(activation=cfg.act)))
     h = shard(h, "batch", None, "mlp")
     if cfg.gated_mlp:
-        h = h * facility.fdot(x, p["w3"])
-    return facility.fdot_fused(h, p["w2"], residual=residual)
+        h = h * facility.contract(DOT, x, p["w3"])
+    return facility.contract(DOT, h, p["w2"], residual=residual)
 
 
 # ----------------------------------------------------------------------
@@ -287,4 +293,5 @@ def embed_tokens(p, tokens, cfg, dtype=jnp.bfloat16):
 
 def logits(p, x, cfg):
     w = (p["tok"].T if cfg.tie_embeddings else p["unembed"])
-    return facility.fdot(x, w.astype(x.dtype), out_dtype=jnp.float32)
+    return facility.contract(DOT, x, w.astype(x.dtype),
+                             plan=Plan(out_dtype=jnp.float32))

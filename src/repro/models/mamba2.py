@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
+from repro.core.facility import DOT, Plan
 from repro.models import layers
 from repro.parallel.api import shard
 
@@ -107,18 +108,18 @@ def ssd_chunked(x, dt, A, B, C, D, chunk, return_state: bool = False):
 
     # 1) intra-chunk (the "quadratic attention" branch of the duality)
     L = jnp.exp(_segsum(dAc))                             # (b,nc,h,L,L)
-    scores = facility.feinsum("bcln,bcsn->bcls", Cc, Bc,
-                              out_dtype=jnp.float32)      # (b,nc,L,L)
+    scores = facility.contract("bcln,bcsn->bcls", Cc, Bc,
+                               plan=Plan(out_dtype=jnp.float32))  # (b,nc,L,L)
     att = scores[:, :, None] * L                          # (b,nc,h,L,L)
-    y_intra = facility.feinsum("bchls,bcshp->bclhp",
-                               att.astype(x.dtype), xc)
+    y_intra = facility.contract("bchls,bcshp->bclhp",
+                                att.astype(x.dtype), xc)
 
     # 2) chunk states: decayed outer products B^T (dt x)
     decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)     # (b,nc,h,L)
-    states = facility.feinsum(
+    states = facility.contract(
         "bcln,bclhp->bchnp",
         Bc, (xc * decay_states.transpose(0, 1, 3, 2)[..., None]).astype(x.dtype),
-        out_dtype=jnp.float32)                            # (b,nc,h,n,p)
+        plan=Plan(out_dtype=jnp.float32))                 # (b,nc,h,n,p)
 
     # 3) inter-chunk recurrence (sequential scan over chunks)
     chunk_decay = jnp.exp(dA_cum[..., -1])                # (b,nc,h)
@@ -136,7 +137,7 @@ def ssd_chunked(x, dt, A, B, C, D, chunk, return_state: bool = False):
 
     # 4) state -> output contribution
     state_decay = jnp.exp(dA_cum)                         # (b,nc,h,L)
-    y_inter = facility.feinsum(
+    y_inter = facility.contract(
         "bcln,bchnp->bclhp", Cc,
         prev_states.astype(x.dtype)) * state_decay.transpose(
             0, 1, 3, 2)[..., None].astype(x.dtype)
@@ -156,7 +157,7 @@ def apply_mamba2(p, x, cfg, state=None):
     b, l, d = x.shape
     d_in, nheads, conv_dim = dims(cfg)
     n = cfg.ssm_state
-    proj = facility.fdot(x, p["in_proj"])
+    proj = facility.contract(DOT, x, p["in_proj"])
     z, xbc, dt_raw = _split_proj(proj, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
@@ -183,12 +184,12 @@ def apply_mamba2(p, x, cfg, state=None):
         # single-token recurrent update: s <- exp(dt A) s + dt B x
         dA = jnp.exp(dt[:, 0] * A)                        # (b,h)
         sstate = state["ssm"]                             # (b,h,n,p)
-        upd = facility.feinsum("bn,bhp->bhnp", B[:, 0],
-                               (xh[:, 0] * dt[:, 0, :, None]).astype(x.dtype),
-                               out_dtype=jnp.float32)
+        upd = facility.contract("bn,bhp->bhnp", B[:, 0],
+                                (xh[:, 0] * dt[:, 0, :, None]).astype(x.dtype),
+                                plan=Plan(out_dtype=jnp.float32))
         sstate = sstate * dA[..., None, None] + upd
-        y = facility.feinsum("bn,bhnp->bhp", C[:, 0],
-                             sstate.astype(x.dtype))
+        y = facility.contract("bn,bhnp->bhp", C[:, 0],
+                              sstate.astype(x.dtype))
         y = (y.astype(jnp.float32)
              + xh[:, 0].astype(jnp.float32) * p["D"][:, None])
         y = y[:, None].astype(x.dtype)
@@ -200,7 +201,7 @@ def apply_mamba2(p, x, cfg, state=None):
     gf = g.astype(jnp.float32)
     g = (gf * jax.lax.rsqrt((gf * gf).mean(-1, keepdims=True) + cfg.norm_eps)
          * p["norm_scale"]).astype(x.dtype)
-    return facility.fdot(g, p["out_proj"]), new_state
+    return facility.contract(DOT, g, p["out_proj"]), new_state
 
 
 def init_decode_state(cfg, batch, dtype=jnp.float32):

@@ -211,7 +211,9 @@ def _apply_shared_attn(sp, h, emb0, cfg, *, cos_sin, kv=None, q_offset=0,
                        kv_positions=None, valid=None):
     """zamba2 shared block: operates on concat(h, original embedding)."""
     from repro.core import facility
-    hin = facility.fdot(jnp.concatenate([h, emb0], axis=-1), sp["in_proj"])
+    hin = facility.contract(facility.DOT,
+                            jnp.concatenate([h, emb0], axis=-1),
+                            sp["in_proj"])
     hn = L.apply_norm(sp["attn_norm"], hin, cfg)
     a, kv_out = L.apply_attention(sp["attn"], hn, cfg, cos_sin=cos_sin,
                                   kv=kv, q_offset=q_offset,
@@ -246,8 +248,9 @@ def _embed_inputs(params, batch, cfg):
     b, s = tokens.shape
     h = L.embed_tokens(params["embed"], tokens, cfg)
     if cfg.vision_prefix and "vision_embeds" in batch:
-        ve = facility.fdot(batch["vision_embeds"].astype(h.dtype),
-                           params["vision_proj"])
+        ve = facility.contract(facility.DOT,
+                               batch["vision_embeds"].astype(h.dtype),
+                               params["vision_proj"])
         h = jnp.concatenate([ve, h[:, cfg.vision_prefix:]], axis=1)
     if cfg.mrope:
         positions = batch["positions"]        # (3, B, S)
@@ -491,14 +494,13 @@ def decode_step(params, cache, tokens, cfg):
                 lp, k_c, v_c = xs
                 hn = L.apply_norm(lp["attn_norm"], hh, cfg)
                 # project new kv, insert into ring
-                knew = (jax.lax.dot_general(
-                    hn, lp["attn"]["wk"].astype(hn.dtype),
-                    (((2,), (0,)), ((), ())))
-                    .reshape(b, 1, cfg.num_kv_heads, cfg.head_dim))
-                vnew = (jax.lax.dot_general(
-                    hn, lp["attn"]["wv"].astype(hn.dtype),
-                    (((2,), (0,)), ((), ())))
-                    .reshape(b, 1, cfg.num_kv_heads, cfg.head_dim))
+                from repro.core import facility
+                knew = facility.contract(
+                    facility.DOT, hn, lp["attn"]["wk"].astype(hn.dtype)
+                    ).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+                vnew = facility.contract(
+                    facility.DOT, hn, lp["attn"]["wv"].astype(hn.dtype)
+                    ).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
                 knew = L.apply_rope(knew, cos_sin[2], cos_sin[3])
                 k_c = jax.lax.dynamic_update_slice_in_dim(k_c, knew, slot, 1)
                 v_c = jax.lax.dynamic_update_slice_in_dim(v_c, vnew, slot, 1)
@@ -520,14 +522,13 @@ def decode_step(params, cache, tokens, cfg):
                 hh = carry
                 lp, k_c, v_c, ck, cv = xs
                 hn = L.apply_norm(lp["attn_norm"], hh, cfg)
-                knew = (jax.lax.dot_general(
-                    hn, lp["attn"]["wk"].astype(hn.dtype),
-                    (((2,), (0,)), ((), ())))
-                    .reshape(b, 1, cfg.num_kv_heads, cfg.head_dim))
-                vnew = (jax.lax.dot_general(
-                    hn, lp["attn"]["wv"].astype(hn.dtype),
-                    (((2,), (0,)), ((), ())))
-                    .reshape(b, 1, cfg.num_kv_heads, cfg.head_dim))
+                from repro.core import facility
+                knew = facility.contract(
+                    facility.DOT, hn, lp["attn"]["wk"].astype(hn.dtype)
+                    ).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+                vnew = facility.contract(
+                    facility.DOT, hn, lp["attn"]["wv"].astype(hn.dtype)
+                    ).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
                 knew = L.apply_rope(knew, cos_sin[2], cos_sin[3])
                 k_c = jax.lax.dynamic_update_slice_in_dim(k_c, knew, slot, 1)
                 v_c = jax.lax.dynamic_update_slice_in_dim(v_c, vnew, slot, 1)
@@ -592,12 +593,15 @@ def decode_step(params, cache, tokens, cfg):
             # shared attention with its ring cache
             sp = params["shared_attn"]
             from repro.core import facility
-            hin = facility.fdot(jnp.concatenate([h, emb0], axis=-1),
-                                sp["in_proj"])
+            hin = facility.contract(facility.DOT,
+                                    jnp.concatenate([h, emb0], axis=-1),
+                                    sp["in_proj"])
             hn = L.apply_norm(sp["attn_norm"], hin, cfg)
-            knew = facility.fdot(hn, sp["attn"]["wk"]).reshape(
+            knew = facility.contract(
+                facility.DOT, hn, sp["attn"]["wk"]).reshape(
                 b, 1, cfg.num_kv_heads, cfg.head_dim)
-            vnew = facility.fdot(hn, sp["attn"]["wv"]).reshape(
+            vnew = facility.contract(
+                facility.DOT, hn, sp["attn"]["wv"]).reshape(
                 b, 1, cfg.num_kv_heads, cfg.head_dim)
             knew = L.apply_rope(knew, cos_sin[2], cos_sin[3])
             k_c = jax.lax.dynamic_update_slice_in_dim(k_c, knew, slot, 1)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
+from repro.core.facility import DOT, Plan
 from repro.kernels import epilogue as _epilogue
 from repro.models import layers
 from repro.parallel.api import shard
@@ -73,7 +74,8 @@ def apply_moe(p, x, cfg):
     xf = x.reshape(t, d)
 
     # ---- routing (fp32 for numerics) ----
-    router_logits = facility.fdot(xf, p["router"], out_dtype=jnp.float32)
+    router_logits = facility.contract(DOT, xf, p["router"],
+                                      plan=Plan(out_dtype=jnp.float32))
     probs = jax.nn.softmax(router_logits, axis=-1)              # (T, E)
     topw, topi = jax.lax.top_k(probs, k)                        # (T, k)
     topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)   # renorm
@@ -133,14 +135,14 @@ def apply_moe(p, x, cfg):
     # (epilogue.ACTIVATIONS uses exact erf gelu), so one network never
     # mixes two gelu formulations between expert and dense paths.
     act = _epilogue.ACTIVATIONS[cfg.act]
-    h1 = facility.feinsum("ecd,edf->ecf", xe, p["w1"])
+    h1 = facility.contract("ecd,edf->ecf", xe, p["w1"])
     h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
     if cfg.gated_mlp:
-        h3 = facility.feinsum("ecd,edf->ecf", xe, p["w3"])
+        h3 = facility.contract("ecd,edf->ecf", xe, p["w3"])
         h = act(h1) * h3
     else:
         h = act(h1)
-    ye = facility.feinsum("ecf,efd->ecd", h, p["w2"])
+    ye = facility.contract("ecf,efd->ecd", h, p["w2"])
     ye = shard(ye, "experts", None, None).reshape(e * cap, d)
 
     # ---- combine ----
@@ -148,7 +150,8 @@ def apply_moe(p, x, cfg):
         # dest is already in flat (t, k) order: plain gather + weighted sum
         back = jnp.where(keep[:, None], ye[dest], 0).reshape(t, k, d)
         w_tk = (topw * keep.reshape(t, k)).astype(ye.dtype)
-        out = jnp.einsum("tkd,tk->td", back, w_tk)
+        out = facility.contract("tkd,tk->td", back, w_tk,
+                                plan=Plan(out_dtype=back.dtype))
     else:
         back = ye[dest] * topw.reshape(-1)[order][:, None].astype(ye.dtype)
         back = jnp.where(keep[:, None], back, 0)

@@ -4,6 +4,18 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Facility-migration guard: the deprecated shims (facility.fdot /
+    # fdot_fused / feinsum, ops.mma_dot / mma_dot_fused) warn with a
+    # stacklevel that attributes the DeprecationWarning to the *caller*.
+    # Escalate to errors when that caller is in-repo (repro.*) so
+    # production code can never quietly reach a shim, while tests and
+    # external callers keep working against the compatibility surface.
+    config.addinivalue_line(
+        "filterwarnings",
+        r"error:.*deprecated; use facility\.contract:DeprecationWarning:repro\.")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

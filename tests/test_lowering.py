@@ -1,0 +1,510 @@
+"""The lowering registry behind ``facility.contract``.
+
+Covers the api_redesign acceptance surface:
+
+  * cross-backend equivalence: for every registered (op-class, ger-family)
+    pair, the pallas-interpret / xla / ref lowerings agree to the family's
+    policy tolerance on the same Plan — including ``I8GER4``-as-quant
+    (Dequant deprime) and the saturating integer forms;
+  * the ``F32GER_3XBF16`` expansion hook replaces the branches formerly
+    copy-pasted across ``facility.fdot`` / ``fdot_fused`` (regression:
+    the kind dispatches identically via both shims and via ``contract``);
+  * einsum-only workloads (MoE expert dots, attention scores) normalize to
+    GEMMs and dispatch to the Pallas kernels;
+  * registry pluggability and the shims' DeprecationWarning escalation for
+    in-repo callers.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility, lowering, quant
+from repro.core.precision import Ger, policy
+from repro.kernels import epilogue as E
+
+jax.config.update("jax_platform_name", "cpu")
+
+Plan = lowering.Plan
+
+# Per-family comparison tolerance between backends ("policy tolerance"):
+# integer accumulators are exact; fp32/fp64 single-pass lowerings agree to
+# blocked-vs-single-dot rounding; reduced-precision inputs and the 3xbf16
+# emulation accumulate panel-wise in the kernel, so they get the loosest.
+TOL = {
+    Ger.F64GER: dict(rtol=1e-12, atol=1e-12),
+    Ger.F32GER: dict(rtol=1e-4, atol=3e-5),
+    Ger.BF16GER2: dict(rtol=1e-4, atol=3e-5),
+    Ger.F16GER2: dict(rtol=1e-4, atol=3e-5),
+    Ger.F32GER_3XBF16: dict(rtol=1e-3, atol=1e-3),
+    Ger.I16GER2: dict(exact=True),
+    Ger.I8GER4: dict(exact=True),
+    Ger.I4GER8: dict(exact=True),
+}
+
+ALL_KINDS = list(TOL)
+
+
+def _operands(kind, m, k, n, rng):
+    pol = policy(kind)
+    if pol.packed_int4:
+        x = jnp.asarray(rng.integers(-128, 128, (m, k // 2)), jnp.int8)
+        y = jnp.asarray(rng.integers(-128, 128, (k // 2, n)), jnp.int8)
+    elif jnp.issubdtype(pol.acc_dtype, jnp.integer):
+        x = jnp.asarray(rng.integers(-100, 100, (m, k)), pol.x_dtype)
+        hi = 256 if jnp.dtype(pol.y_dtype) == jnp.uint8 else 100
+        lo = 0 if jnp.dtype(pol.y_dtype) == jnp.uint8 else -100
+        y = jnp.asarray(rng.integers(lo, hi, (k, n)), pol.y_dtype)
+    else:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    return x, y
+
+
+def _assert_close(kind, got, want):
+    tol = TOL[kind]
+    if tol.get("exact"):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got, np.float64),
+                                   np.asarray(want, np.float64),
+                                   rtol=tol["rtol"], atol=tol["atol"])
+
+
+# ----------------------------------------------------------------------
+# Cross-backend equivalence, per registered (op-class, ger-family) pair
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS, ids=lambda k: k.value)
+def test_gemm_backends_agree(kind, rng):
+    """Every backend registered for ('gemm', kind) computes the same
+    architected result from the same Plan."""
+    backends = lowering.backends_for("gemm", kind)
+    assert set(backends) == {"pallas", "xla", "ref"}, backends
+    m, k, n = 48, 64, 128
+    x, y = _operands(kind, m, k, n, rng)
+
+    def run():
+        outs = {}
+        for b in backends:
+            outs[b] = facility.contract(
+                "mk,kn->mn", x, y,
+                plan=Plan(ger=kind, backend=b, out_dtype=lowering.ACC,
+                          block=(32, 128, 128)))
+        return outs
+
+    if kind == Ger.F64GER:
+        with jax.experimental.enable_x64():
+            outs = run()
+            ref = outs.pop("ref")
+            for b, got in outs.items():
+                _assert_close(kind, got, ref)
+        return
+    outs = run()
+    ref = outs.pop("ref")
+    for b, got in outs.items():
+        _assert_close(kind, got, ref)
+
+
+@pytest.mark.parametrize("kind", [Ger.BF16GER2, Ger.F32GER, Ger.I8GER4],
+                         ids=lambda k: k.value)
+def test_gemm_backends_agree_with_acc_and_fringe(kind, rng):
+    """Accumulate form + fringe shape (non-multiple M/K/N)."""
+    m, k, n = 33, 57, 130
+    x, y = _operands(kind, m, k, n, rng)
+    c = (jnp.asarray(rng.integers(-5, 5, (m, n)), jnp.int32)
+         if jnp.issubdtype(policy(kind).acc_dtype, jnp.integer)
+         else jnp.asarray(rng.normal(size=(m, n)), jnp.float32))
+    outs = [facility.contract(
+        "mk,kn->mn", x, y, acc=c,
+        plan=Plan(ger=kind, backend=b, out_dtype=lowering.ACC))
+        for b in lowering.backends_for("gemm", kind)]
+    for got in outs[1:]:
+        _assert_close(kind, got, outs[0])
+
+
+@pytest.mark.parametrize("spec,shapes", [
+    ("ecd,edf->ecf", ((4, 8, 32), (4, 32, 16))),        # MoE expert dots
+    ("bqhd,bkhd->bhqk", ((2, 8, 4, 16), (2, 12, 4, 16))),  # attn scores
+    ("bhqk,bkhd->bqhd", ((2, 4, 8, 12), (2, 12, 4, 16))),  # attn values
+    ("bcln,bcsn->bcls", ((2, 3, 8, 16), (2, 3, 8, 16))),   # SSD intra
+    ("tkd,tk->td", ((6, 2, 8), (6, 2))),                # MoE un-scatter
+    ("bn,bhp->bhnp", ((2, 8), (2, 3, 4))),              # outer product
+])
+def test_einsum_specs_normalize_and_backends_agree(spec, shapes, rng):
+    """feinsum-class specs route through the gemm normalizer on every
+    backend and agree with plain jnp.einsum."""
+    a = jnp.asarray(rng.normal(size=shapes[0]), jnp.float32)
+    b = jnp.asarray(rng.normal(size=shapes[1]), jnp.float32)
+    want = jnp.einsum(spec, a, b)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            spec, a, b, plan=Plan(ger=Ger.F32GER, backend=backend,
+                                  out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5, err_msg=backend)
+
+
+@pytest.mark.parametrize("kind", [Ger.I16GER2, Ger.I8GER4],
+                         ids=lambda k: k.value)
+def test_saturating_backends_agree(kind, rng):
+    """Saturating forms: every registered backend clamps identically —
+    at the saturation point and away from it."""
+    backends = lowering.backends_for("gemm.saturating", kind)
+    assert "xla" in backends and "ref" in backends
+    pol = policy(kind)
+    hi = 32767 if pol.x_dtype == jnp.int16 else 127
+    xs = [jnp.full((4, 32), hi, pol.x_dtype),
+          jnp.asarray(rng.integers(-50, 50, (4, 32)), pol.x_dtype)]
+    yhi = 255 if jnp.dtype(pol.y_dtype) == jnp.uint8 else hi
+    ys = [jnp.full((32, 4), yhi, pol.y_dtype),
+          jnp.asarray(rng.integers(0 if yhi == 255 else -50, 50, (32, 4)),
+                      pol.y_dtype)]
+    for x, y in zip(xs, ys):
+        outs = [facility.contract(
+            "mk,kn->mn", x, y,
+            plan=Plan(ger=kind, saturating=True, backend=b,
+                      out_dtype=lowering.ACC)) for b in backends]
+        for got in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(outs[0]))
+    # the saturating path really saturates (seed the accumulator near the
+    # positive rail; every rank-r group of positive products then clamps)
+    near_top = jnp.full((4, 4), np.iinfo(np.int32).max - 1000, jnp.int32)
+    top = facility.contract(
+        "mk,kn->mn", xs[0], ys[0], acc=near_top,
+        plan=Plan(ger=kind, saturating=True, backend="xla",
+                  out_dtype=lowering.ACC))
+    assert int(top.max()) == np.iinfo(np.int32).max
+    ref_top = facility.contract(
+        "mk,kn->mn", xs[0], ys[0], acc=near_top,
+        plan=Plan(ger=kind, saturating=True, backend="ref",
+                  out_dtype=lowering.ACC))
+    np.testing.assert_array_equal(np.asarray(top), np.asarray(ref_top))
+
+
+def test_saturating_rejects_epilogue_and_forms(rng):
+    """Regression: saturating plans must refuse (not silently drop)
+    fused epilogues and alpha/beta/neg accumulate forms."""
+    x = jnp.ones((4, 32), jnp.int16)
+    y = jnp.ones((32, 4), jnp.int16)
+    bias = jnp.ones((4,), jnp.int32)
+    with pytest.raises(ValueError, match="saturating forms"):
+        facility.contract(
+            "mk,kn->mn", x, y, bias=bias,
+            plan=Plan(ger=Ger.I16GER2, saturating=True, backend="xla",
+                      epilogue=E.Epilogue(bias=True)))
+    with pytest.raises(ValueError, match="saturating forms"):
+        facility.contract(
+            "mk,kn->mn", x, y,
+            plan=Plan(ger=Ger.I16GER2, saturating=True, backend="xla",
+                      alpha=2.0))
+    # out_dtype IS honoured
+    out = facility.contract(
+        "mk,kn->mn", x, y,
+        plan=Plan(ger=Ger.I16GER2, saturating=True, backend="xla",
+                  out_dtype=jnp.float32))
+    assert out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.full((4, 4), 32.0, np.float32))
+
+
+def test_acc_seed_with_leading_dims_agrees_across_backends(rng):
+    """Regression: an accumulator seed on an fdot-shaped ND spec must
+    lower on every backend (acc reshapes like the residual does)."""
+    x = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(2, 4, 6)), jnp.float32)
+    outs = [facility.contract(
+        facility.DOT, x, w, acc=c,
+        plan=Plan(ger=Ger.F32GER, backend=b, out_dtype=jnp.float32))
+        for b in ("pallas", "xla", "ref")]
+    want = jnp.einsum("bsk,kn->bsn", x, w) + c
+    for b, got in zip(("pallas", "xla", "ref"), outs):
+        assert got.shape == (2, 4, 6), b
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5, err_msg=b)
+
+
+def test_quant_plan_backends_agree(rng):
+    """quant.qdot IS an I8GER4 plan: the int32 ger is exact on every
+    backend and the shared Dequant deprime makes the fp32 results
+    bit-identical."""
+    x = jnp.asarray(rng.normal(size=(16, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    wq, ws = quant.quantize_weight(w)
+    outs = [np.asarray(quant.qdot(x, wq, ws, backend=b))
+            for b in ("pallas", "xla", "ref")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    rel = float(np.linalg.norm(outs[0] - np.asarray(x @ w))
+                / np.linalg.norm(np.asarray(x @ w)))
+    assert rel < 0.02, rel
+
+
+def test_fused_epilogue_backends_agree(rng):
+    """A fused-epilogue Plan lowers equivalently on all three backends."""
+    m, k, n = 32, 48, 128
+    x, y = _operands(Ger.F32GER, m, k, n, rng)
+    bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    ep = E.Epilogue(bias=True, activation="gelu", residual=True)
+    outs = [facility.contract(
+        "mk,kn->mn", x, y, bias=bias, residual=res,
+        plan=Plan(ger=Ger.F32GER, backend=b, epilogue=ep,
+                  out_dtype=jnp.float32))
+        for b in ("pallas", "xla", "ref")]
+    for got in outs[1:]:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# F32GER_3XBF16: one expansion hook instead of copy-pasted branches
+# ----------------------------------------------------------------------
+
+def test_3xbf16_is_an_expansion_hook():
+    rep, hook = lowering.expansion_for(Ger.F32GER_3XBF16)
+    assert rep == Ger.BF16GER2
+    x = jnp.ones((4, 8), jnp.float32) * 1.234567
+    passes = hook(x, jnp.ones((8, 4), jnp.float32))
+    assert [k for _, _, k in passes] == [Ger.BF16GER2] * 3
+    # hi + lo recovers the fp32 operand to ~16 mantissa bits (the
+    # emulation's premise: two bf16 limbs per fp32 value)
+    (xh, _, _), _, (xl, _, _) = passes
+    np.testing.assert_allclose(
+        np.asarray(xh, np.float32) + np.asarray(xl, np.float32),
+        np.asarray(x), rtol=1e-5, atol=0)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False],
+                         ids=["pallas", "xla"])
+def test_3xbf16_dispatches_identically_via_both_shims(use_pallas, rng):
+    """Regression for the deduplicated special case: fdot and fdot_fused
+    route F32GER_3XBF16 through the same registered expansion, so the
+    shims agree bit-for-bit with contract and with each other."""
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    cfg = facility.FacilityConfig(ger=Ger.F32GER_3XBF16,
+                                  out_dtype=jnp.float32,
+                                  use_pallas=use_pallas, interpret=True)
+    with facility.configure(cfg), warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        plain_shim = facility.fdot(x, w)
+        fused_shim = facility.fdot_fused(x, w, bias=bias)
+        plain = facility.contract(facility.DOT, x, w)
+        fused = facility.contract(facility.DOT, x, w, bias=bias)
+    np.testing.assert_array_equal(np.asarray(plain_shim), np.asarray(plain))
+    np.testing.assert_array_equal(np.asarray(fused_shim), np.asarray(fused))
+    # fused == plain + bias exactly (single shared deprime)
+    np.testing.assert_allclose(np.asarray(fused),
+                               np.asarray(plain) + np.asarray(bias),
+                               rtol=1e-6, atol=1e-6)
+    # and the emulation still beats plain bf16 accuracy-wise
+    exact = np.asarray(x) @ np.asarray(w)
+    bf = np.asarray(jnp.asarray(x, jnp.bfloat16) @ jnp.asarray(
+        w, jnp.bfloat16), np.float32)
+    assert np.abs(np.asarray(plain) - exact).max() \
+        < 0.05 * np.abs(bf - exact).max()
+
+
+def test_3xbf16_special_case_gone_from_facility():
+    """The facility surface owns no per-kind branches any more."""
+    import inspect
+    src = inspect.getsource(facility)
+    assert "F32GER_3XBF16" not in src
+    from repro.kernels import ops
+    src = inspect.getsource(ops.mma_dot) + inspect.getsource(
+        ops.mma_dot_fused)
+    assert "F32GER_3XBF16" not in src
+
+
+# ----------------------------------------------------------------------
+# Einsum-only workloads now reach the Pallas kernels
+# ----------------------------------------------------------------------
+
+def test_moe_expert_dots_dispatch_to_pallas(rng):
+    xe = jnp.asarray(rng.normal(size=(4, 16, 32)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(4, 32, 64)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        got = facility.contract("ecd,edf->ecf", xe, w1)
+    assert lowering.DISPATCH_COUNTS[("pallas", "gemm", Ger.F32GER.value)] \
+        == 1, dict(lowering.DISPATCH_COUNTS)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum("ecd,edf->ecf",
+                                                     xe, w1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_scores_dispatch_to_pallas(rng):
+    q = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 24, 4, 32)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        got = facility.contract("bqhd,bkhd->bhqk", q, k)
+    assert lowering.DISPATCH_COUNTS[("pallas", "gemm", Ger.F32GER.value)] \
+        == 1
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum("bqhd,bkhd->bhqk",
+                                                     q, k)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_consults_autotune_cache(tmp_path, monkeypatch, rng):
+    """The registry's block resolver honours planted autotune winners for
+    normalized einsum workloads too (cache consulted outside jit)."""
+    from repro.core import autotune, tiling
+    cache = autotune.AutotuneCache(tmp_path / "at.json")
+    monkeypatch.setattr(autotune, "_DEFAULT_CACHE", cache)
+    cache.put(autotune.cache_key(Ger.F32GER, 16, 64, 32),
+              tiling.BlockConfig(8, 128, 128), source="traced", score=0.0)
+    assert lowering.resolve_block(Ger.F32GER, 16, 64, 32, None) \
+        == (8, 128, 128)
+    # explicit block still wins
+    assert lowering.resolve_block(Ger.F32GER, 16, 64, 32, (32, 128, 128)) \
+        == (32, 128, 128)
+    xe = jnp.asarray(rng.normal(size=(4, 16, 32)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(4, 32, 64)), jnp.float32)
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        got = facility.contract("ecd,edf->ecf", xe, w1)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum("ecd,edf->ecf",
+                                                     xe, w1)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Spec normalizer
+# ----------------------------------------------------------------------
+
+def test_parse_spec_classification():
+    p = lowering.parse_spec("bqhd,bkhd->bhqk", 4, 4)
+    assert p.batch == ("b", "h")
+    assert p.contract == ("d",)
+    assert p.x_free == ("q",) and p.y_free == ("k",)
+    assert p.out_perm is None
+    p = lowering.parse_spec("...k,kn->...n", 3, 2)
+    assert p.x_free == ("Z", "Y") and p.contract == ("k",)
+    assert p.is_plain_2d is False
+    assert lowering.parse_spec("mk,kn->mn", 2, 2).is_plain_2d
+    # sum-reductions and diagonals fall back to the einsum lowering
+    assert lowering.parse_spec("mk,kn->n", 2, 2) is None
+    assert lowering.parse_spec("mm,mn->mn", 2, 2) is None
+
+
+def test_unparseable_spec_falls_back_to_einsum(rng):
+    x = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32, use_pallas=True,
+            interpret=True)):
+        got = facility.contract("mm,mn->mn", x, y)   # diagonal of x
+    assert lowering.DISPATCH_COUNTS[("xla", "einsum", Ger.F32GER.value)] \
+        == 1
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum("mm,mn->mn", x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_label_size_mismatch_raises(rng):
+    x = jnp.zeros((4, 8), jnp.float32)
+    y = jnp.zeros((9, 4), jnp.float32)
+    with pytest.raises(ValueError, match="size mismatch"):
+        facility.contract("mk,kn->mn", x, y,
+                          plan=Plan(ger=Ger.F32GER,
+                                    out_dtype=jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# Registry mechanics
+# ----------------------------------------------------------------------
+
+def test_lookup_falls_back_most_specific_first():
+    key_args = ("gemm", Ger.BF16GER2, True)
+    base = lowering.lookup("xla", *key_args)
+    assert base is not None
+    marker = lambda op: "specialized"              # noqa: E731
+    lowering._REGISTRY[("xla", "gemm", Ger.BF16GER2, True)] = marker
+    try:
+        assert lowering.lookup("xla", "gemm", Ger.BF16GER2, True) is marker
+        assert lowering.lookup("xla", "gemm", Ger.BF16GER2, False) is base
+        assert lowering.lookup("xla", "gemm", Ger.F32GER, True) is base
+    finally:
+        del lowering._REGISTRY[("xla", "gemm", Ger.BF16GER2, True)]
+
+
+def test_registered_lowering_is_pluggable(rng):
+    """A plugged-in specialization wins dispatch for its exact key and is
+    cleanly removable — the swappable-lowering claim."""
+    calls = []
+
+    @lowering.register("xla", "gemm", ger=Ger.F16GER2, fused=False)
+    def _spy(op):
+        calls.append(op.spec)
+        return lowering._lower_xla_gemm(op)
+
+    try:
+        x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+        out = facility.contract(
+            "mk,kn->mn", x, y,
+            plan=Plan(ger=Ger.F16GER2, backend="xla",
+                      out_dtype=jnp.float32))
+        assert calls == ["mk,kn->mn"]
+        assert out.shape == (8, 8)
+    finally:
+        del lowering._REGISTRY[("xla", "gemm", Ger.F16GER2, False)]
+
+
+def test_unknown_backend_raises():
+    x = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="unknown backend"):
+        facility.contract("mk,kn->mn", x, x,
+                          plan=Plan(backend="tpu-v9"))
+
+
+# ----------------------------------------------------------------------
+# Deprecation contract
+# ----------------------------------------------------------------------
+
+def test_shims_warn_and_match_contract(rng):
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32)):
+        with pytest.warns(DeprecationWarning, match="facility.contract"):
+            a = facility.fdot(x, w)
+        b = facility.contract(facility.DOT, x, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shim_warning_attributed_to_in_repo_caller(rng):
+    """The DeprecationWarning is raised at the *caller's* stacklevel, so
+    the tier-1 filter (conftest) escalates repro.* callers to errors —
+    the mechanism that keeps production code off the shims."""
+    x = jnp.zeros((4, 8), jnp.float32)
+    w = jnp.zeros((8, 4), jnp.float32)
+    ns = {"__name__": "repro._fake_in_repo_caller",
+          "facility": facility, "x": x, "w": w}
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "error", category=DeprecationWarning, module=r"repro\.")
+        with pytest.raises(DeprecationWarning):
+            eval("facility.fdot(x, w)", ns)
+        # non-repro callers only get the warning
+        ns["__name__"] = "somewhere.else"
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eval("facility.fdot(x, w)", ns)
