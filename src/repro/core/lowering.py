@@ -165,7 +165,12 @@ def _expand_ellipsis(labels: str, ndim: int, spec: str) -> tuple[str, ...]:
     if n_ell > len(_ELL_LABELS):
         raise ValueError(f"spec {spec!r}: '...' spans {n_ell} dims "
                          f"(max {len(_ELL_LABELS)})")
-    return tuple(head) + tuple(_ELL_LABELS[:n_ell]) + tuple(tail)
+    # Labels come off the END of the pool so that, einsum-style, the
+    # ellipses of two operands with different ranks align on their LAST
+    # dims ('...ij,...jk' with a 4-d x 3-d: x's trailing batch dim pairs
+    # with y's only one).
+    return (tuple(head) + tuple(_ELL_LABELS[len(_ELL_LABELS) - n_ell:])
+            + tuple(tail))
 
 
 @functools.lru_cache(maxsize=None)
@@ -189,7 +194,8 @@ def parse_spec(spec: str, x_ndim: int, y_ndim: int) -> ParsedSpec | None:
         n_ell = max(len(xs) - len(xs_s.replace("...", "")),
                     len(ys) - len(ys_s.replace("...", "")))
         head, _, tail = out_s.partition("...")
-        outs = tuple(head) + tuple(_ELL_LABELS[:n_ell]) + tuple(tail)
+        outs = (tuple(head) + tuple(_ELL_LABELS[len(_ELL_LABELS) - n_ell:])
+                + tuple(tail))
     else:
         outs = tuple(out_s)
     xset, yset, oset = set(xs), set(ys), set(outs)
@@ -208,6 +214,20 @@ def parse_spec(spec: str, x_ndim: int, y_ndim: int) -> ParsedSpec | None:
     x_free = tuple(d for d in xs if d not in yset)
     y_free = tuple(d for d in ys if d not in xset)
     return ParsedSpec(xs, ys, outs, batch, contract, x_free, y_free)
+
+
+def _ellipsis_broadcasts(parsed: ParsedSpec, x, y) -> bool:
+    """True when an ellipsis-derived label has size 1 on one operand and
+    >1 on the other — einsum broadcasting the GEMM normalizer cannot
+    express, so the caller routes to the general einsum lowering."""
+    sizes: dict[str, int] = {}
+    for labels, shape in ((parsed.x_labels, jnp.shape(x)),
+                          (parsed.y_labels, jnp.shape(y))):
+        for d, n in zip(labels, shape):
+            prev = sizes.setdefault(d, n)
+            if prev != n and d in _ELL_LABELS and 1 in (prev, n):
+                return True
+    return False
 
 
 def _sizes(parsed: ParsedSpec, x, y) -> dict[str, int]:
@@ -673,7 +693,8 @@ def _lower_ref_gemm(op: Op):
     def chain(xi, yi, kind, c):
         if b is None:
             return ger2d(xi, yi, kind, c)
-        return jnp.stack([ger2d(xi[i], yi[i], kind, None)
+        return jnp.stack([ger2d(xi[i], yi[i], kind,
+                                None if c is None else c[i])
                           for i in range(b)])
 
     if not op.fused and not op.has_forms and len(passes) == 1:
@@ -808,6 +829,8 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
     ep.validate(pol.acc_dtype, bias=bias, residual=residual)
 
     parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
+    if parsed is not None and _ellipsis_broadcasts(parsed, x, y):
+        parsed = None
     op_class = "gemm.saturating" if plan.saturating else (
         "gemm" if parsed is not None else "einsum")
     if dequant is not None and not ep.is_identity:

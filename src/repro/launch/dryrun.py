@@ -192,12 +192,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
     try:
         ca = compiled.cost_analysis()
         ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        # Aggregate keys only: the per-instruction "bytes accessedN{}"
+        # entries (~500/record) name opaque HLO instruction ids nothing
+        # downstream can parse, and bloat the corpus ~24KB/record.
         rec["cost_analysis"] = {
             k: float(v) for k, v in ca.items()
-            if isinstance(v, (int, float)) and (
-                k in ("flops", "bytes accessed", "transcendentals",
-                      "optimal_seconds")
-                or k.startswith("bytes accessed"))}
+            if isinstance(v, (int, float)) and
+            k in ("flops", "bytes accessed", "transcendentals",
+                  "optimal_seconds")}
     except Exception as e:
         rec["cost_analysis"] = {"error": str(e)}
 

@@ -148,6 +148,54 @@ def test_einsum_specs_normalize_and_backends_agree(spec, shapes, rng):
                                    rtol=1e-4, atol=1e-5, err_msg=backend)
 
 
+def test_batched_expansion_chain_backends_agree(rng):
+    """Regression: a batched F32GER_3XBF16 contraction chains three
+    BF16GER2 passes per batch element; the ref backend once dropped the
+    inter-pass accumulator (returning only the last pass)."""
+    a = jnp.asarray(rng.normal(size=(3, 16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(3, 32, 8)), jnp.float32)
+    want = jnp.einsum("bmk,bkn->bmn", a, b)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "bmk,bkn->bmn", a, b,
+            plan=Plan(ger=Ger.F32GER_3XBF16, backend=backend,
+                      out_dtype=jnp.float32))
+        _assert_close(Ger.F32GER_3XBF16, got, want)
+
+
+def test_ellipsis_right_aligns_like_einsum(rng):
+    """Regression: when both operands carry '...' with different ranks,
+    the ellipsis dims must pair right-aligned (einsum semantics), not
+    left-aligned."""
+    a = jnp.asarray(rng.normal(size=(2, 7, 3, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(7, 4, 5)), jnp.float32)
+    want = jnp.einsum("...ij,...jk->...ik", a, b)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "...ij,...jk->...ik", a, b,
+            plan=Plan(ger=Ger.F32GER, backend=backend,
+                      out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5, err_msg=backend)
+
+
+def test_ellipsis_broadcast_falls_back_to_einsum(rng):
+    """A size-1-vs-n ellipsis dim is einsum broadcasting the GEMM
+    normalizer cannot express; it must route to the einsum lowering and
+    still match jnp.einsum."""
+    a = jnp.asarray(rng.normal(size=(1, 3, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(7, 4, 5)), jnp.float32)
+    want = jnp.einsum("...ij,...jk->...ik", a, b)
+    lowering.DISPATCH_COUNTS.clear()
+    got = facility.contract(
+        "...ij,...jk->...ik", a, b,
+        plan=Plan(ger=Ger.F32GER, backend="xla", out_dtype=jnp.float32))
+    assert lowering.DISPATCH_COUNTS[
+        ("xla", "einsum", Ger.F32GER.value)] == 1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
 @pytest.mark.parametrize("kind", [Ger.I16GER2, Ger.I8GER4],
                          ids=lambda k: k.value)
 def test_saturating_backends_agree(kind, rng):
@@ -395,7 +443,8 @@ def test_parse_spec_classification():
     assert p.x_free == ("q",) and p.y_free == ("k",)
     assert p.out_perm is None
     p = lowering.parse_spec("...k,kn->...n", 3, 2)
-    assert p.x_free == ("Z", "Y") and p.contract == ("k",)
+    # ellipsis labels come off the END of the pool (right-aligned pairing)
+    assert p.x_free == ("V", "U") and p.contract == ("k",)
     assert p.is_plain_2d is False
     assert lowering.parse_spec("mk,kn->mn", 2, 2).is_plain_2d
     # sum-reductions and diagonals fall back to the einsum lowering
