@@ -1,0 +1,35 @@
+"""Paper section III: the DFT as a matrix-multiply workload.
+
+Times the facility-routed path — ``blas3.dft`` is a thin plan over
+``facility.contract``'s ``complex`` op-class (four real accumulate-form
+gers) — against the library FFT (the legacy direct path a framework would
+otherwise call), so the contract route's trajectory is recorded per PR.
+The O(N^2) matrix form is the MMA exploitation the paper refers to:
+small/batched DFTs spend their time in the rank-k updates, not the
+butterfly bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import blas3
+
+
+def _fft(x):
+    out = jnp.fft.fft(x, axis=0)
+    return jnp.real(out), jnp.imag(out)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n, m in [(64, 64), (256, 64), (512, 128)]:
+        x = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        us_con = time_fn(jax.jit(blas3.dft), x)
+        us_fft = time_fn(jax.jit(_fft), x)
+        # 4 real NxN x NxM gers vs the O(N log N) butterfly
+        flops = 4 * 2 * n * n * m
+        emit(f"dft_N{n}x{m}", us_con,
+             f"fft_us={us_fft:.0f};"
+             f"contract_vs_fft={us_con / max(us_fft, 1e-9):.2f};"
+             f"gflops={flops / max(us_con, 1e-9) / 1e3:.2f}")

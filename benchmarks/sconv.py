@@ -1,6 +1,10 @@
 """Section V-B analogue: SCONV.  Implicit-im2col (the paper's approach —
-convolution computed directly on the image) vs materialized im2col + GEMM.
-Reports wall time of both and the HBM-traffic ratio: materializing Abar
+convolution computed directly on the image) vs materialized im2col + GEMM,
+plus the facility-routed path (``facility.contract(facility.CONV2D, ...)``
+through the conv op-class) vs the legacy direct ``lax.conv`` dispatch, so
+the perf trajectory of the registry route is recorded per PR.
+
+Reports wall time of each and the HBM-traffic ratio: materializing Abar
 (eq. 8) reads/writes the patch matrix (KH*KW x) while the MMA approach
 re-reads each image row KH times only."""
 
@@ -9,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core import facility, lowering
+from repro.core.precision import Ger
 from repro.kernels import ref
 
 
@@ -22,6 +28,13 @@ def _direct_conv(img, ker):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
+def _contract_conv(img, ker):
+    return facility.contract(
+        facility.CONV2D, img, ker,
+        plan=lowering.Plan(ger=Ger.F32GER, backend="xla",
+                           out_dtype=jnp.float32))
+
+
 def run():
     rng = np.random.default_rng(0)
     for (h, w, c, f) in [(64, 64, 3, 8), (128, 128, 16, 32)]:
@@ -29,6 +42,7 @@ def run():
         ker = jnp.asarray(rng.normal(size=(3, 3, c, f)), jnp.float32)
         us_mat = time_fn(jax.jit(_im2col_conv), img, ker)
         us_dir = time_fn(jax.jit(_direct_conv), img, ker)
+        us_con = time_fn(jax.jit(_contract_conv), img, ker)
         # analytic traffic (bytes): materialized reads img once, writes +
         # re-reads the 9x patch matrix; implicit reads each row KH times.
         n, kh, kw = 4, 3, 3
@@ -40,4 +54,6 @@ def run():
         imp_traffic = kh * img_b + out_b
         emit(f"sconv_{h}x{w}x{c}", us_dir,
              f"materialized_us={us_mat:.0f};"
+             f"contract_us={us_con:.0f};"
+             f"contract_overhead={us_con / max(us_dir, 1e-9):.2f};"
              f"traffic_ratio={mat_traffic / imp_traffic:.2f}")

@@ -9,15 +9,26 @@ bank construction the paper describes (k kernels x 27 for the 3-channel
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.core import facility
+from repro.core.precision import Ger
+from repro.kernels import ref
 
 rng = np.random.default_rng(0)
+
+
+def conv(img, ker, backend="pallas"):
+    """Implicit im2col through the facility's conv op-class."""
+    return facility.contract(
+        facility.CONV2D, img, ker,
+        plan=facility.Plan(ger=Ger.F32GER, backend=backend,
+                           out_dtype=jnp.float32))
+
 
 # an RGB image and a bank of 8 3x3 kernels (the paper's k x 27 Hbar)
 image = jnp.asarray(rng.normal(size=(1, 64, 96, 3)), jnp.float32)
 kernels = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
 
-out = ops.mma_conv2d(image, kernels)          # implicit im2col (Pallas)
+out = conv(image, kernels)                    # implicit im2col (Pallas)
 want = ref.conv2d(image, kernels)             # materialized Abar (oracle)
 np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                            rtol=1e-4, atol=1e-4)
@@ -28,7 +39,7 @@ sobel = jnp.zeros((3, 3, 3, 1), jnp.float32)
 sobel = sobel.at[:, 0, :, 0].set(jnp.asarray([[-1, -2, -1]] * 3).T)
 sobel = sobel.at[:, 2, :, 0].set(jnp.asarray([[1, 2, 1]] * 3).T)
 img = jnp.zeros((1, 16, 16, 3), jnp.float32).at[:, :, 8:, :].set(1.0)
-resp = ops.mma_conv2d(img, sobel)
+resp = conv(img, sobel)
 peak = jnp.abs(resp[0, :, :, 0]).max(axis=0)
 assert int(peak.argmax()) in (5, 6, 7), int(peak.argmax())
 print("sobel edge response at column", int(peak.argmax()), "OK")

@@ -56,7 +56,10 @@ print("4. xvi8ger4:", qout.dtype, "max", int(qout.max()))
 # --- 5. SCONV: convolution without materializing patches ---------------
 img = jnp.asarray(rng.normal(size=(1, 32, 32, 3)), jnp.float32)
 ker = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
-conv = ops.mma_conv2d(img, ker)
+conv = facility.contract(facility.CONV2D, img, ker,
+                         plan=facility.Plan(ger=Ger.F32GER,
+                                            backend="pallas",
+                                            out_dtype=jnp.float32))
 np.testing.assert_allclose(np.asarray(conv), np.asarray(
     ref.conv2d(img, ker)), rtol=1e-4, atol=1e-4)
 print("5. SCONV implicit im2col:", conv.shape)

@@ -19,6 +19,18 @@ if grep -rnE "jnp\.(dot|einsum|matmul)\(" src --include="*.py" \
 fi
 echo "facility purity OK"
 
+# Same rule one layer down: raw lax.dot_general / lax.conv_general_dilated
+# belong to the lowering layer (core/lowering.py) and the kernels/oracles
+# (src/repro/kernels/) only — models and everything above must route conv
+# and GEMM work through facility.contract's op-classes.
+if grep -rnE "lax\.(dot_general|conv_general_dilated)\(" src --include="*.py" \
+        | grep -vE "src/repro/core/lowering\.py|src/repro/kernels/"; then
+    echo "FAIL: raw lax.dot_general/conv_general_dilated outside the" \
+         "lowering layer and kernels" >&2
+    exit 1
+fi
+echo "lax purity OK"
+
 echo "== tier-1 tests =="
 # tests/conftest.py escalates the deprecated shims' DeprecationWarnings to
 # errors for in-repo (repro.*) callers.

@@ -58,6 +58,8 @@ class ArchConfig:
     encoder_layers: int = 0          # >0 -> enc-dec model
     decoder_len: int = 448           # fixed decoder length for training
     frontend_stub: bool = False      # audio/vision embeddings precomputed
+    n_mels: int = 0                  # audio frontend: mel bins per frame
+                                     # (conv stem: k3s1 + k3s2, gelu, SAME)
 
     # --- vlm ---
     vision_prefix: int = 0           # leading positions fed by patch embeds
@@ -89,6 +91,14 @@ class ArchConfig:
     @property
     def is_enc_dec(self) -> bool:
         return self.encoder_layers > 0
+
+    def encoder_len(self, seq: int) -> int:
+        """Encoder positions per ``seq`` input frames: the conv stem's
+        stride-2 second layer halves the frame axis (SAME padding); the
+        stub frontend passes embeddings through unchanged."""
+        if self.frontend_stub or not self.is_enc_dec:
+            return seq
+        return -(-seq // 2)
 
     @property
     def supports_long_context(self) -> bool:
@@ -142,6 +152,9 @@ class ArchConfig:
             # encoder layers + cross attention in decoder
             n += self.encoder_layers * (n_layer_attn + ffn(self.d_ff) + 2 * d)
             n += self.num_layers * n_layer_attn  # cross-attn
+            if not self.frontend_stub:
+                # conv stem: k3 (n_mels -> d) + k3 s2 (d -> d), with biases
+                n += 3 * self.n_mels * d + d + 3 * d * d + d
         return n
 
     def active_param_count(self) -> int:

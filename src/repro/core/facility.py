@@ -44,6 +44,13 @@ ACC = lowering.ACC
 # The workhorse spec: contract the last axis of x with the first of w.
 DOT = "...k,kn->...n"
 
+# Canonical convolution specs (the conv op-class; stride/padding ride in
+# the Plan).  Convolutions are not two-operand einsums, so the facility
+# names them architecturally instead (paper section V-B).
+CONV2D = lowering.CONV2D                      # "nhwc,hwio->nhwo"
+CONV1D = lowering.CONV1D                      # "nlc,lio->nlo"
+CONV1D_DEPTHWISE = lowering.CONV1D_DEPTHWISE  # "nlc,lc->nlc"
+
 
 @dataclasses.dataclass(frozen=True)
 class FacilityConfig:

@@ -18,7 +18,10 @@ Lowerings register per ``(backend, op_class, ger, fused)`` key:
     shard), ``"ref"`` (eager architected oracles — ground truth).
   * ``op_class``: ``"gemm"`` (any spec that normalizes to a — possibly
     batched — 2-D GEMM), ``"gemm.saturating"`` (xvi16ger2s-style clamped
-    accumulation), ``"einsum"`` (general contraction fallback).
+    accumulation), ``"conv"`` (the canonical NHWC conv specs — normalized
+    to the implicit-im2col rank-(KW*C) update form), ``"complex"``
+    (complex-dtype operands — four real accumulate-form gers, pp/np),
+    ``"einsum"`` (general contraction fallback).
   * ``ger``/``fused``: optional specializations; lookup falls back from the
     most specific key to ``(backend, op_class, None, None)``.
 
@@ -95,6 +98,27 @@ class Plan:
     beta: float = 1.0
     saturating: bool = False          # xvi16ger2s-style clamped updates
     interpret: bool | None = None     # None -> config (Pallas CPU mode)
+    # Conv op-class only (spec is one of the canonical conv specs below):
+    stride: object = 1                # int or per-spatial-dim tuple
+    padding: str = "valid"            # valid | same | causal (1-D left pad)
+
+
+# ----------------------------------------------------------------------
+# Conv specs: the architected convolution surface (paper section V-B)
+# ----------------------------------------------------------------------
+# Convolutions are not expressible as two-operand einsums (the sliding
+# window reuses input elements), so the facility names them with canonical
+# specs instead; ``execute`` routes them to the ``conv`` op-class, which
+# normalizes to the implicit-im2col rank-(KW*C) update form.  Labels follow
+# lax dimension_numbers mnemonics (NHWC / HWIO).
+
+CONV2D = "nhwc,hwio->nhwo"            # dense 2-D conv, stride/padding in Plan
+CONV1D = "nlc,lio->nlo"               # dense 1-D conv over the L (time) axis
+CONV1D_DEPTHWISE = "nlc,lc->nlc"      # per-channel taps (groups == C)
+
+# spec -> (spatial ndim, depthwise)
+_CONV_SPECS = {CONV2D: (2, False), CONV1D: (1, False),
+               CONV1D_DEPTHWISE: (1, True)}
 
 
 # ----------------------------------------------------------------------
@@ -449,6 +473,9 @@ class Op:
     neg_acc: bool
     alpha: float
     beta: float
+    backend: str = "xla"              # the backend this op dispatched to
+    stride: tuple[int, ...] = ()      # conv op-class: per-spatial-dim stride
+    padding: str = "valid"            # conv op-class: valid | same | causal
 
     @property
     def fused(self) -> bool:
@@ -778,6 +805,255 @@ def _lower_ref_saturating(op: Op):
                     if op.out_dtype is not None else out)
 
 
+# ---- conv op-class (SCONV, paper section V-B) ------------------------
+# One shared geometry normalizer (padding math identical across backends),
+# three lowerings: Pallas (implicit im2col via mma_conv's fused KW panel),
+# XLA (one shardable conv_general_dilated), ref (materialized-Abar oracle).
+
+def _conv_norm(op: Op):
+    """Normalize a conv invocation to padded NHWC x HWIO form.
+
+    Returns ``(x4, w4, (sh, sw), depthwise, squeeze)``: 1-D specs gain a
+    size-1 H axis (``squeeze`` strips it from the output), and the
+    ``same``/``causal`` paddings become one explicit ``jnp.pad`` here so
+    every backend sees identical VALID geometry.
+    """
+    nd, depthwise = _CONV_SPECS[op.spec]
+    x, w = op.x, op.y
+    if nd == 1:
+        x = x[:, None]                           # (N, 1, L, C)
+        w = w[None]                              # (1, KW, C[, F])
+        strides = (1,) + op.stride
+    else:
+        strides = op.stride
+    kh, kw = w.shape[0], w.shape[1]
+    c = w.shape[2]
+    if x.shape[-1] != c:
+        raise ValueError(f"conv channel mismatch: image {x.shape} vs "
+                         f"filter {w.shape}")
+    pads = []
+    for k, st, size in zip((kh, kw), strides, x.shape[1:3]):
+        if op.padding == "valid":
+            lo = hi = 0
+        elif op.padding == "same":
+            out = -(-size // st)
+            total = max((out - 1) * st + k - size, 0)
+            lo, hi = total // 2, total - total // 2
+        elif op.padding == "causal":       # left pad: output t sees <= t
+            if nd != 1:
+                raise ValueError(
+                    "causal padding is 1-D (time-axis) vocabulary; "
+                    f"spec {op.spec!r} is 2-D")
+            lo, hi = k - 1, 0
+        else:
+            raise ValueError(f"unknown conv padding {op.padding!r}; "
+                             f"want valid | same | causal")
+        pads.append((lo, hi))
+    if any(p != (0, 0) for p in pads):
+        x = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+    return x, w, strides, depthwise, nd == 1
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "strides", "depthwise", "squeeze", "out_dtype", "epilogue"))
+def _xla_conv_impl(x, w, bias, residual, *, kind, strides, depthwise,
+                   squeeze, out_dtype, epilogue):
+    """One shardable conv_general_dilated per architected pass + the
+    epilogue at deprime.
+
+    Per pass, inputs are rounded to that pass family's operand dtype, then
+    up-cast to the accumulator dtype for the conv itself — the same
+    numerics as a reduced-precision MXU pass with a high-precision
+    accumulator, and (unlike a ``preferred_element_type`` widening, whose
+    transpose rule rejects the dtype mix) cleanly differentiable.
+    Convolution is bilinear, so expansion hooks (F32GER_3XBF16) apply
+    exactly as for GEMM: the hi/lo-split passes chain over one resident
+    accumulator.
+    """
+    pol = precision.policy(kind)
+
+    def one(xi, wi):
+        if depthwise:
+            c = wi.shape[2]
+            return lax.conv_general_dilated(
+                xi, wi.reshape(wi.shape[0], wi.shape[1], 1, c), strides,
+                "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c)
+        return lax.conv_general_dilated(
+            xi, wi, strides, "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    out = None
+    for xi, wi, k in _passes(kind, x, w):
+        pk = precision.policy(k)
+        o = one(xi.astype(pk.x_dtype).astype(pol.acc_dtype),
+                wi.astype(pk.y_dtype).astype(pol.acc_dtype))
+        out = o if out is None else out + o
+    out = out.astype(pol.acc_dtype)
+    if squeeze:
+        out = out[:, 0]
+    from repro.kernels import epilogue as _epilogue
+    out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+@register("xla", "conv")
+def _lower_xla_conv(op: Op):
+    x4, w4, strides, depthwise, squeeze = _conv_norm(op)
+    return _xla_conv_impl(
+        x4, w4, op.bias, op.residual, kind=op.ger, strides=strides,
+        depthwise=depthwise, squeeze=squeeze, out_dtype=op.out_dtype,
+        epilogue=op.epilogue)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "bf", "strides", "interpret", "out_dtype", "epilogue",
+    "squeeze"))
+def _pallas_conv_impl(x, w, bias, residual, *, kind, bf, strides,
+                      interpret, out_dtype, epilogue, squeeze):
+    from repro.kernels import epilogue as _epilogue
+    from repro.kernels import mma_conv as _conv
+    pol = precision.policy(kind)
+    ep = epilogue if epilogue is not None and not epilogue.is_identity \
+        else None
+    passes = _passes(kind, x, w)
+    if len(passes) == 1:
+        xi, wi, k = passes[0]
+        pk = precision.policy(k)
+        out = _conv.mma_conv2d(
+            xi.astype(pk.x_dtype), wi.astype(pk.y_dtype), bf=bf,
+            stride=strides,
+            out_dtype=out_dtype if out_dtype is not None else pol.acc_dtype,
+            ep=ep, bias=bias, residual=residual, interpret=interpret)
+        return out[:, 0] if squeeze else out
+    # Expansion chain (F32GER_3XBF16): conv is bilinear, so the hi/lo
+    # split passes sum over one accumulator; the epilogue then applies
+    # once on the chained product (mirrors the gemm expansion tail).
+    prod = None
+    for xi, wi, k in passes:
+        pk = precision.policy(k)
+        o = _conv.mma_conv2d(
+            xi.astype(pk.x_dtype), wi.astype(pk.y_dtype), bf=bf,
+            stride=strides, out_dtype=pol.acc_dtype, interpret=interpret)
+        prod = o if prod is None else prod + o
+    # epilogue on the 4-D chained product (residual arrives 4-D), then
+    # squeeze, matching the kernel's in-store application order.
+    prod = _epilogue.apply(prod, ep, bias=bias, residual=residual)
+    if squeeze:
+        prod = prod[:, 0]
+    return prod.astype(out_dtype) if out_dtype is not None else prod
+
+
+@register("pallas", "conv")
+def _lower_pallas_conv(op: Op):
+    """Implicit-im2col kernel: the resident (OW, bf) accumulator takes one
+    rank-(KW*C) update per KH step (mma_conv's fused KW panel).  Depthwise
+    and non-f32-accumulator convs never reach this lowering — ``execute``
+    reroutes them to the shardable XLA backend (same precedent as
+    gemm.saturating) before the dispatch is counted."""
+    x4, w4, strides, _, squeeze = _conv_norm(op)
+    kh, kw, c, f = w4.shape
+    ow = (x4.shape[2] - kw) // strides[1] + 1
+    # Best-effort autotune-cache reuse: the panel dot is (OW, KW*C) x
+    # (KW*C, bf), so consult the gemm cache at that shape; only the N-tile
+    # (bf) of a winner applies to the conv grid.
+    block = resolve_block(op.ger, ow, f, kw * c, op.block, op.epilogue.key)
+    res = op.residual
+    if res is not None and squeeze:
+        res = res[:, None]
+    return _pallas_conv_impl(
+        x4, w4, op.bias, res, kind=op.ger,
+        bf=block[1] if block is not None else None, strides=strides,
+        interpret=op.interpret, out_dtype=op.out_dtype,
+        epilogue=op.epilogue, squeeze=squeeze)
+
+
+@register("ref", "conv")
+def _lower_ref_conv(op: Op):
+    """Materialized-Abar oracle (ref.conv2d) — exactly the patch matrix
+    the Pallas kernel avoids building; depthwise: eager shift-and-sum.
+    Expansion hooks chain per-pass like the gemm oracle."""
+    from repro.kernels import epilogue as _epilogue
+    from repro.kernels import ref as _ref
+    x4, w4, strides, depthwise, squeeze = _conv_norm(op)
+    pol = op.pol
+    out = None
+    for xi, wi, k in _passes(op.ger, x4, w4):
+        pk = precision.policy(k)
+        xi = xi.astype(pk.x_dtype)
+        wi = wi.astype(pk.y_dtype)
+        if depthwise:
+            o = _ref.depthwise_conv(xi, wi, stride=strides,
+                                    acc_dtype=pol.acc_dtype)
+        else:
+            o = _ref.conv2d(xi, wi, stride=strides)
+        o = o.astype(pol.acc_dtype)
+        out = o if out is None else out + o
+    if squeeze:
+        out = out[:, 0]
+    out = _epilogue.apply(out, op.epilogue, bias=op.bias,
+                          residual=op.residual)
+    return out.astype(op.out_dtype) if op.out_dtype is not None else out
+
+
+# ---- complex op-class (complex matmul / DFT, paper section III) ------
+
+def _lower_complex(op: Op):
+    """Complex contraction as the four real accumulate-form gers the paper
+    composes (re <- re@re - im@im via the np form, im <- re@im + im@re via
+    pp) — the decomposition ``blas3.complex_gemm`` used to hand-code.  Runs
+    on whichever backend's gemm lowering this op resolved to, so the
+    cross-backend equivalence surface extends to complex for free."""
+    fn = lookup(op.backend, "gemm", op.ger, False)
+    identity_ep = type(op.epilogue)()
+    xr, xi = jnp.real(op.x), jnp.imag(op.x)
+    yr, yi = jnp.real(op.y), jnp.imag(op.y)
+
+    def ger(a, b, acc=None, neg=False):
+        sub = dataclasses.replace(
+            op, x=a, y=b, acc=acc, bias=None, residual=None, out_dtype=None,
+            epilogue=identity_ep, neg_product=neg, neg_acc=False,
+            alpha=1.0, beta=1.0)
+        return fn(sub)
+
+    re = ger(xr, yr)
+    re = ger(xi, yi, acc=re, neg=True)           # np accumulate form
+    im = ger(xr, yi)
+    im = ger(xi, yr, acc=im)                     # pp accumulate form
+
+    # External accumulate forms, per component (mirrors Accumulator:
+    # out = alpha * ([-]prod + beta * [-]C)).
+    if op.neg_product:
+        re, im = -re, -im
+    if op.acc is not None:
+        cr = jnp.real(op.acc).astype(re.dtype)
+        ci = jnp.imag(op.acc).astype(im.dtype)
+        if op.beta != 1.0:
+            cr = cr * jnp.asarray(op.beta, cr.dtype)
+            ci = ci * jnp.asarray(op.beta, ci.dtype)
+        if op.neg_acc:
+            cr, ci = -cr, -ci
+        re, im = re + cr, im + ci
+    if op.alpha != 1.0:
+        re = re * jnp.asarray(op.alpha, re.dtype)
+        im = im * jnp.asarray(op.alpha, im.dtype)
+
+    if op.out_dtype is None:
+        return lax.complex(re, im)
+    od = jnp.dtype(op.out_dtype)
+    if jnp.issubdtype(od, jnp.complexfloating):
+        return lax.complex(re, im).astype(od)
+    # Real out_dtype: round each component to it, then re-embed (bf16/f16
+    # have no complex pairing, so the container stays complex64).
+    re, im = re.astype(od), im.astype(od)
+    f = jnp.float64 if od == jnp.dtype(jnp.float64) else jnp.float32
+    return lax.complex(re.astype(f), im.astype(f))
+
+
+for _b in BACKENDS:
+    _REGISTRY[(_b, "complex", None, None)] = _lower_complex
+
+
 # ---- general einsum fallback -----------------------------------------
 
 @register("xla", "einsum")
@@ -828,11 +1104,45 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
         ep = _epilogue.make(bias=bias, residual=residual)
     ep.validate(pol.acc_dtype, bias=bias, residual=residual)
 
-    parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
-    if parsed is not None and _ellipsis_broadcasts(parsed, x, y):
-        parsed = None
-    op_class = "gemm.saturating" if plan.saturating else (
-        "gemm" if parsed is not None else "einsum")
+    spec = spec.replace(" ", "")
+    conv_info = _CONV_SPECS.get(spec)
+    stride: tuple[int, ...] = ()
+    parsed = None
+    if conv_info is not None:
+        nd, _ = conv_info
+        op_class = "conv"
+        s = plan.stride
+        stride = (s,) * nd if isinstance(s, int) else tuple(s)
+        if len(stride) != nd or any(st < 1 for st in stride):
+            raise ValueError(f"conv spec {spec!r} wants {nd} stride "
+                             f"value(s) >= 1, got {plan.stride!r}")
+        if (acc is not None or dequant is not None or plan.saturating
+                or plan.neg_product or plan.neg_acc
+                or plan.alpha != 1.0 or plan.beta != 1.0):
+            raise ValueError(
+                "conv contractions take no accumulator seed, dequant, "
+                "saturating, or alpha/beta/neg accumulate forms — only a "
+                "fused epilogue")
+    elif jnp.iscomplexobj(x) or jnp.iscomplexobj(y):
+        op_class = "complex"
+        parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
+        if parsed is None or parsed.batch:
+            raise ValueError(
+                f"complex contraction {spec!r} must normalize to an "
+                f"unbatched GEMM")
+        if dequant is not None or plan.saturating or not ep.is_identity:
+            raise ValueError(
+                "complex contractions take accumulate forms only — no "
+                "fused epilogue, dequant, or saturating updates")
+    else:
+        parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
+        if parsed is not None and _ellipsis_broadcasts(parsed, x, y):
+            parsed = None
+        op_class = "gemm.saturating" if plan.saturating else (
+            "gemm" if parsed is not None else "einsum")
+    if op_class != "conv" and (plan.stride != 1 or plan.padding != "valid"):
+        raise ValueError(
+            f"stride/padding apply to the conv specs only, not {spec!r}")
     if dequant is not None and not ep.is_identity:
         raise ValueError("dequant and a fused epilogue are exclusive")
     if (parsed is not None and parsed.out_perm is not None
@@ -848,6 +1158,14 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             "saturating forms take an accumulator seed only — no fused "
             "epilogue, dequant, or alpha/beta/neg accumulate forms "
             "(xvi16ger2s-class instructions have no such variants)")
+
+    if op_class == "conv" and backend == "pallas" and (
+            conv_info[1] or pol.acc_dtype != jnp.float32):
+        # Depthwise taps have no cross-channel rank to fold on the MXU and
+        # the conv kernel accumulates in f32 only: route to the shardable
+        # XLA lowering BEFORE counting, so DISPATCH_COUNTS names the
+        # backend that actually ran (gemm.saturating precedent).
+        backend = "xla"
 
     fn = lookup(backend, op_class, ger, not ep.is_identity)
     if fn is None and backend == "pallas":
@@ -865,7 +1183,8 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             spec=spec, ger=ger, pol=pol, out_dtype=lowering_out_dtype,
             epilogue=ep, block=plan.block, interpret=interpret,
             neg_product=plan.neg_product, neg_acc=plan.neg_acc,
-            alpha=plan.alpha, beta=plan.beta)
+            alpha=plan.alpha, beta=plan.beta, backend=backend,
+            stride=stride, padding=plan.padding)
     DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
     out = fn(op)
     if dequant is not None:

@@ -34,8 +34,9 @@ def synthetic_batch(cfg, *, batch: int, seq: int, step: int,
     toks = toks.astype(np.int32)
     out = {"tokens": toks[:, :seq], "labels": toks[:, 1:seq + 1]}
     if cfg.is_enc_dec:
+        frame_dim = cfg.d_model if cfg.frontend_stub else cfg.n_mels
         out["frames"] = rng.normal(
-            size=(batch, seq, cfg.d_model)).astype(np.float32)
+            size=(batch, seq, frame_dim)).astype(np.float32)
         dl = cfg.decoder_len
         dtoks = rng.integers(0, cfg.vocab_size, (batch, dl + 1),
                              dtype=np.int64).astype(np.int32)

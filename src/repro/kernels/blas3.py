@@ -1,15 +1,17 @@
 """Other computations built from rank-k updates (paper section III claim:
 "the instructions ... can be used as building blocks of other
 computations, such as convolution, triangular solve and discrete Fourier
-transform").  Convolution is kernels/mma_conv.py; this module adds the
-other two, each composed from the facility's accumulate-form gers.
+transform").  Convolution is the registry's ``conv`` op-class
+(kernels/mma_conv.py beneath it); this module keeps the other two as thin
+plans over ``facility.contract``:
 
 * ``trsm``: blocked lower-triangular solve.  The panel update
   ``B_i <- B_i - L_ij @ X_j`` is exactly the *np* accumulate form
   ``A <- -XY + A`` (paper eq. 2), chained across block columns.
-* ``complex_gemm`` / ``dft``: complex matmul as four real rank-k updates
-  using the pp/np forms (re <- re@re [-] im@im, im <- re@im [+] im@re);
-  the DFT applies the twiddle matrix through it.
+* ``complex_gemm`` / ``dft``: complex matmul through the registry's
+  ``complex`` op-class — four real rank-k updates using the pp/np forms
+  (re <- re@re [-] im@im, im <- re@im [+] im@re), lowered by whichever
+  backend the plan selects; the DFT applies the twiddle matrix through it.
 """
 
 from __future__ import annotations
@@ -18,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import facility, lowering
 from repro.core.precision import Ger
@@ -25,10 +28,10 @@ from repro.core.precision import Ger
 
 def _ger(x, y, kind, acc=None, neg_product=False):
     """Accumulate-form ger through the facility (the registry's ACC
-    lifecycle carries the pp/np forms), so trsm/DFT panel updates share
-    its validation and accumulate-form semantics.  The XLA backend is
-    pinned: these panels are small and irregular, so they are not
-    autotuned or kernel-lowered."""
+    lifecycle carries the pp/np forms), so trsm panel updates share its
+    validation and accumulate-form semantics.  The XLA backend is pinned:
+    these panels are small and irregular, so they are not autotuned or
+    kernel-lowered."""
     return facility.contract(
         "mk,kn->mn", x, y, acc=acc,
         plan=lowering.Plan(ger=kind, neg_product=neg_product,
@@ -60,31 +63,59 @@ def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
     return x
 
 
-def complex_gemm(ar, ai, br, bi, kind: Ger = Ger.F32GER):
-    """(ar + i·ai) @ (br + i·bi) via four real accumulate-form gers."""
-    re = _ger(ar, br, kind)
-    re = _ger(ai, bi, kind, acc=re, neg_product=True)        # np form
-    im = _ger(ar, bi, kind)
-    im = _ger(ai, br, kind, acc=im)                          # pp form
-    return re, im
+def complex_gemm(ar, ai, br, bi, kind: Ger = Ger.F32GER,
+                 backend: str | None = None):
+    """(ar + i·ai) @ (br + i·bi) via the registry's ``complex`` op-class
+    (four real accumulate-form gers).  Returns (re, im) in the family's
+    accumulator dtype, like the hand-coded decomposition this replaces."""
+    fdt = jnp.float64 if kind == Ger.F64GER else jnp.float32
+    a = jax.lax.complex(ar.astype(fdt), ai.astype(fdt))
+    b = jax.lax.complex(br.astype(fdt), bi.astype(fdt))
+    out = facility.contract(
+        "mk,kn->mn", a, b,
+        plan=lowering.Plan(ger=kind, backend=backend,
+                           out_dtype=lowering.ACC))
+    return jnp.real(out), jnp.imag(out)
 
 
-@functools.lru_cache(maxsize=8)
-def _twiddle(n: int):
-    k = jnp.arange(n)
-    ang = -2.0 * jnp.pi * k[:, None] * k[None, :] / n
-    return jnp.cos(ang), jnp.sin(ang)
+@functools.lru_cache(maxsize=32)
+def _twiddle(n: int, dtype_name: str = "float32"):
+    """Host-side (numpy) twiddle factors, keyed by (n, dtype).
+
+    Built in float64 and rounded ONCE to the target dtype — never through
+    an f32 intermediate: the old device-side f32 construction both pinned
+    f32 buffers in the lru_cache for the process lifetime and (because the
+    f32 angles lose precision at large k^2) silently perturbed hundreds of
+    bf16 entries per matrix.  Returning numpy keeps nothing device-resident
+    between calls.
+    """
+    k = np.arange(n)
+    ang = -2.0 * np.pi * np.outer(k, k) / n
+    dt = jnp.dtype(dtype_name)
+    return np.cos(ang).astype(dt), np.sin(ang).astype(dt)
 
 
-def dft(x_re: jnp.ndarray, x_im: jnp.ndarray | None = None):
-    """Dense DFT along axis 0 of (N, M) signals via complex_gemm.
+_KIND_FOR_DTYPE = {
+    jnp.dtype(jnp.float64): Ger.F64GER,
+    jnp.dtype(jnp.float32): Ger.F32GER,
+    jnp.dtype(jnp.bfloat16): Ger.BF16GER2,
+    jnp.dtype(jnp.float16): Ger.F16GER2,
+}
+
+
+def dft(x_re: jnp.ndarray, x_im: jnp.ndarray | None = None,
+        kind: Ger | None = None, backend: str | None = None):
+    """Dense DFT along axis 0 of (N, M) signals via the complex op-class.
 
     (O(N^2) matrix form — the MMA exploitation the paper refers to is
     precisely the matrix-multiply formulation of small/batched DFTs.)
+    Twiddles are built in the *input's* dtype, so a bf16 caller folds
+    bf16-rounded twiddles, not f32-truncated-then-cast ones.
     """
     n = x_re.shape[0]
-    wr, wi = _twiddle(n)
+    wr, wi = _twiddle(n, jnp.dtype(x_re.dtype).name)
     if x_im is None:
         x_im = jnp.zeros_like(x_re)
-    return complex_gemm(wr.astype(x_re.dtype), wi.astype(x_re.dtype),
-                        x_re, x_im)
+    kind = kind or _KIND_FOR_DTYPE.get(jnp.dtype(x_re.dtype), Ger.F32GER)
+    return complex_gemm(jnp.asarray(wr), jnp.asarray(wi), x_re, x_im,
+                        kind=kind, backend=backend)

@@ -16,6 +16,12 @@ Pallas mapping:
   ger updates for the 3x3x3-channel case, batched into one rank-(KW*C)
   update.  When KW*C is not lane-aligned for the MXU (and we are not in
   interpret mode), the kernel falls back to KW separate rank-C dots.
+
+Dispatched by the ``conv`` op-class of the lowering registry
+(``facility.contract(facility.CONV2D, ...)``); strides subsample the
+resident-row reads (output row oh reads image row ``oh*sh + kh``; the KW
+shifts step by ``sw``), so the accumulator-residency structure is
+unchanged.
 """
 
 from __future__ import annotations
@@ -30,8 +36,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import epilogue as _epilogue
 
 
-def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, acc_dtype,
-                  fuse_kw: bool, ep: _epilogue.Epilogue | None):
+def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, sw: int,
+                  acc_dtype, fuse_kw: bool, ep: _epilogue.Epilogue | None):
     refs = list(refs)
     x_ref, w_ref = refs[:2]
     pos = 2
@@ -46,22 +52,23 @@ def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, acc_dtype,
     def _prime():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    row = x_ref[0, 0]                       # (W, C) image row oh + kh
+    row = x_ref[0, 0]                       # (W, C) image row oh*sh + kh
     c = row.shape[1]
+    span = (ow - 1) * sw + 1                # row extent one shift covers
     if fuse_kw:
         # Hoisted form: one (OW, KW*C) panel of shifted row reads against
         # the full (KW*C, bf) filter slice — a single rank-(KW*C) update
         # instead of KW rank-C updates.  Column order is kw-major to match
         # w_ref.reshape's (kw, c) flattening.
         patch = jnp.concatenate(
-            [row[kw:kw + ow, :] for kw in range(kw_total)], axis=1)
+            [row[kw:kw + span:sw, :] for kw in range(kw_total)], axis=1)
         wk = w_ref[0].reshape(kw_total * c, -1)         # (KW*C, bf)
         acc_ref[...] += jax.lax.dot_general(
             patch, wk, (((1,), (0,)), ((), ())),
             preferred_element_type=acc_dtype)
     else:
         for kw in range(kw_total):          # shifted displacements
-            xs = row[kw:kw + ow, :]         # (OW, C) static slice
+            xs = row[kw:kw + span:sw, :]    # (OW, C) static strided slice
             wk = w_ref[0, kw]               # (C, bf)
             acc_ref[...] += jax.lax.dot_general(
                 xs, wk, (((1,), (0,)), ((), ())),
@@ -79,22 +86,27 @@ def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, acc_dtype,
 
 
 def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
-               bf: int | None = None, out_dtype=jnp.float32,
+               bf: int | None = None, stride: tuple[int, int] = (1, 1),
+               out_dtype=jnp.float32,
                ep: _epilogue.Epilogue | None = None,
                bias: jnp.ndarray | None = None,
                residual: jnp.ndarray | None = None,
-               interpret: bool = False) -> jnp.ndarray:
-    """VALID 2-D convolution, stride 1 (paper's h * A).
+               interpret: bool = False,
+               fuse_kw: bool | None = None) -> jnp.ndarray:
+    """VALID 2-D convolution, stride (sh, sw) (paper's h * A).
 
     image: (N, H, W, C); kernels: (KH, KW, C, F) -> (N, OH, OW, F).
     ``ep`` fuses bias (F,) / activation / residual (N, OH, OW, F) into the
-    final-KH deprime store (epilogue.py contract).
+    final-KH deprime store (epilogue.py contract).  ``fuse_kw`` pins the
+    single-panel-dot form on/off (None = auto: fused whenever the
+    concatenated panel is MXU-liftable).
     """
     n, h, w, c = image.shape
     kh, kw, c2, f = kernels.shape
     if c != c2:
         raise ValueError(f"channel mismatch {image.shape} vs {kernels.shape}")
-    oh, ow = h - kh + 1, w - kw + 1
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
     bf = bf or min(f, 128)
     acc_dtype = jnp.float32
     ep = ep if ep is not None and not ep.is_identity else None
@@ -104,17 +116,19 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
         raise ValueError("bias/residual operands need an Epilogue")
     # Single-dot form needs the concatenated panel to be MXU-liftable;
     # interpret mode (CPU) always is, compiled mode wants lane alignment.
-    fuse_kw = kw > 1 and (interpret or (kw * c) % 128 == 0)
+    if fuse_kw is None:
+        fuse_kw = kw > 1 and (interpret or (kw * c) % 128 == 0)
 
     grid = (n * oh, -(-f // bf), kh)
     kernel = functools.partial(
-        _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, acc_dtype=acc_dtype,
-        fuse_kw=fuse_kw, ep=ep)
+        _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, sw=sw,
+        acc_dtype=acc_dtype, fuse_kw=fuse_kw, ep=ep)
 
     in_specs = [
-        # One full image row (oh + kh), resident once per (row, kh).
+        # One full image row (oh*sh + kh), resident once per (row, kh).
         pl.BlockSpec((1, 1, w, c),
-                     lambda i, j, k, oh=oh: (i // oh, i % oh + k, 0, 0)),
+                     lambda i, j, k, oh=oh, sh=sh: (i // oh,
+                                                    (i % oh) * sh + k, 0, 0)),
         # One kh-slice of the filter bank: (1, KW, C, bf).
         pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j)),
     ]

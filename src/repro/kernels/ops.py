@@ -3,23 +3,21 @@
 Historically this module owned the dispatch logic (pallas-vs-XLA switch,
 autotune-cache consult, the F32GER_3XBF16 three-pass split).  All of that
 moved into the lowering registry (``repro.core.lowering``): ``mma_dot`` /
-``mma_dot_fused`` survive as deprecated shims so existing callers and the
-tier-1 suite keep working, while in-repo code calls ``facility.contract``
-directly.  ``mma_pm_dot`` (prefixed masked forms), ``mma_ger_saturating``
-(clamped accumulate forms) and ``mma_conv2d`` (SCONV) remain the supported
-kernel-level builtins for the operations ``contract`` specs do not name.
+``mma_dot_fused`` / ``mma_conv2d`` survive as deprecated shims so existing
+callers and the tier-1 suite keep working, while in-repo code calls
+``facility.contract`` directly (convolution is the registry's ``conv``
+op-class since the facility.CONV* specs landed).  ``mma_pm_dot`` (prefixed
+masked forms) and ``mma_ger_saturating`` (clamped accumulate forms) remain
+the supported kernel-level builtins for operations ``contract`` specs do
+not name.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import facility, lowering, precision
 from repro.kernels import epilogue as _epilogue
-from repro.kernels import mma_conv as _conv
 from repro.kernels import ref as _ref
 
 Ger = precision.Ger
@@ -141,10 +139,21 @@ def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
         plan=_plan(kind, None, use_pallas, interpret, None))
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bf"))
 def mma_conv2d(image, kernels, *, use_pallas: bool = True,
                interpret: bool = True, bf: int | None = None):
-    """SCONV: VALID stride-1 2-D convolution (paper section V-B)."""
-    if use_pallas:
-        return _conv.mma_conv2d(image, kernels, bf=bf, interpret=interpret)
-    return _ref.conv2d(image, kernels)
+    """Deprecated: ``facility.contract(facility.CONV2D, image, kernels,
+    plan=Plan(ger=Ger.F32GER, backend=..., stride=..., padding=...))``.
+
+    SCONV: VALID stride-1 2-D convolution (paper section V-B), now owned
+    by the registry's ``conv`` op-class (``use_pallas=False`` maps to the
+    ``ref`` materialized-Abar lowering this shim used to call directly).
+    """
+    lowering.deprecated_shim(
+        "ops.mma_conv2d", "contract(facility.CONV2D, image, kernels, "
+        "plan=Plan(ger=Ger.F32GER, backend=..., block=...))")
+    return facility.contract(
+        facility.CONV2D, image, kernels,
+        plan=lowering.Plan(
+            ger=Ger.F32GER, backend="pallas" if use_pallas else "ref",
+            block=(8, bf, 128) if bf is not None else None,
+            interpret=interpret, out_dtype=jnp.float32))

@@ -85,25 +85,50 @@ def gemm(x: jnp.ndarray, y: jnp.ndarray, kind: precision.Ger,
     return out
 
 
-def conv2d(image: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+def conv2d(image: jnp.ndarray, kernels: jnp.ndarray,
+           stride: tuple[int, int] = (1, 1)) -> jnp.ndarray:
     """SCONV oracle (paper section V-B): VALID 2-D convolution.
 
-    image: (N, H, W, C), kernels: (KH, KW, C, F).  No padding, stride 1 —
-    exactly the paper's h * A formulation, but computed by explicitly
-    materializing the Abar patch matrix (eq. 8), which is precisely what the
-    Pallas kernel avoids doing.
+    image: (N, H, W, C), kernels: (KH, KW, C, F).  No padding, stride
+    (sh, sw) — exactly the paper's h * A formulation, but computed by
+    explicitly materializing the Abar patch matrix (eq. 8), which is
+    precisely what the Pallas kernel avoids doing.
     """
     n, h, w, c = image.shape
     kh, kw, _, f = kernels.shape
-    oh, ow = h - kh + 1, w - kw + 1
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
     # Materialize Abar: (N, OH, OW, KH*KW*C) patch matrix.
     patches = []
     for i in range(kh):
         for j in range(kw):
-            patches.append(image[:, i:i + oh, j:j + ow, :])
+            patches.append(image[:, i:i + (oh - 1) * sh + 1:sh,
+                                 j:j + (ow - 1) * sw + 1:sw, :])
     abar = jnp.concatenate(patches, axis=-1)
     hbar = kernels.reshape(kh * kw * c, f)
     return lax.dot_general(
         abar.reshape(n * oh * ow, kh * kw * c), hbar,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).reshape(n, oh, ow, f)
+
+
+def depthwise_conv(image: jnp.ndarray, taps: jnp.ndarray,
+                   stride: tuple[int, int] = (1, 1),
+                   acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Depthwise (groups == C) VALID conv oracle: eager shift-and-sum.
+
+    image: (N, H, W, C), taps: (KH, KW, C) — channel c of the output sees
+    only channel c of the input (no cross-channel rank to fold), so the
+    oracle is the literal sum of KH*KW elementwise-scaled shifts.
+    """
+    n, h, w, c = image.shape
+    kh, kw, _ = taps.shape
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
+    out = jnp.zeros((n, oh, ow, c), acc_dtype)
+    for i in range(kh):
+        for j in range(kw):
+            sl = image[:, i:i + (oh - 1) * sh + 1:sh,
+                       j:j + (ow - 1) * sw + 1:sw, :]
+            out = out + sl.astype(acc_dtype) * taps[i, j].astype(acc_dtype)
+    return out

@@ -43,8 +43,11 @@ def cell_skip_reason(cfg, shape_name: str) -> str | None:
 def batch_specs(cfg, *, batch: int, seq: int, for_train: bool = True):
     """Abstract train/prefill batch."""
     if cfg.is_enc_dec:
+        # stub frontend: precomputed d_model embeddings; real frontend:
+        # raw mel frames into the conv stem.
+        frame_dim = cfg.d_model if cfg.frontend_stub else cfg.n_mels
         b = {
-            "frames": sds((batch, seq, cfg.d_model), jnp.float32),
+            "frames": sds((batch, seq, frame_dim), jnp.float32),
             "tokens": sds((batch, cfg.decoder_len), jnp.int32),
             "labels": sds((batch, cfg.decoder_len), jnp.int32),
         }

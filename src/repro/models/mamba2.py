@@ -18,6 +18,8 @@ import jax.numpy as jnp
 
 from repro.core import facility
 from repro.core.facility import DOT, Plan
+from repro.core.precision import Ger
+from repro.kernels.epilogue import Epilogue
 from repro.models import layers
 from repro.parallel.api import shard
 
@@ -66,15 +68,35 @@ def _split_proj(proj, cfg):
 
 
 def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
-    """Depthwise causal conv, width W.  conv_state: (B, W-1, C) history."""
+    """Depthwise causal conv, width W.  conv_state: (B, W-1, C) history.
+
+    Routed through the facility's ``conv`` op-class
+    (``facility.CONV1D_DEPTHWISE``): the decode path prepends the ring
+    history and runs VALID; the train path is the architected causal
+    (left) padding.  Bias + silu fuse into the deprime store via the
+    epilogue contract; F32GER keeps the tap products in f32, matching the
+    old hand-rolled shift-and-sum numerics.
+    """
     w = conv_w.shape[0]
     if conv_state is not None:
         xin = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        padding = "valid"
     else:
-        xin = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
-    out = sum(xin[:, i:i + xbc.shape[1], :] * conv_w[i]
-              for i in range(w))
-    return jax.nn.silu(out + conv_b).astype(xbc.dtype), xin[:, -(w - 1):, :]
+        xin = xbc
+        padding = "causal"
+    out = facility.contract(
+        facility.CONV1D_DEPTHWISE, xin, conv_w, bias=conv_b,
+        plan=Plan(ger=Ger.F32GER, padding=padding,
+                  epilogue=Epilogue(bias=True, activation="silu"),
+                  out_dtype=xbc.dtype))
+    if conv_state is not None:
+        return out, xin[:, -(w - 1):, :]
+    # New history = last W-1 input frames, zero-prefixed for short seqs
+    # (the causal padding itself stays inside the conv lowering).
+    l = xbc.shape[1]
+    state = (xbc[:, -(w - 1):, :] if l >= w - 1
+             else jnp.pad(xbc, ((0, 0), (w - 1 - l, 0), (0, 0))))
+    return out, state
 
 
 def _segsum(dA):

@@ -137,6 +137,20 @@ def init_params(cfg, key) -> Params:
             "layers": _stack_init(ks[6], cfg, "encoder", cfg.encoder_layers),
             "norm": L.init_norm(cfg),
         }
+        if not cfg.frontend_stub:
+            kf = jax.random.split(ks[7], 2)
+            d = cfg.d_model
+            p["encoder"]["frontend"] = {
+                # whisper stem: conv1 k3 s1 SAME + gelu, conv2 k3 s2 SAME
+                # + gelu — both via the facility's CONV1D op-class.
+                "conv1_w": jax.random.normal(
+                    kf[0], (3, cfg.n_mels, d), jnp.float32)
+                * (3 * cfg.n_mels) ** -0.5,
+                "conv1_b": jnp.zeros((d,), jnp.float32),
+                "conv2_w": jax.random.normal(
+                    kf[1], (3, d, d), jnp.float32) * (3 * d) ** -0.5,
+                "conv2_b": jnp.zeros((d,), jnp.float32),
+            }
     if cfg.vision_prefix:
         p["vision_proj"] = L._dense_init(ks[7], (cfg.d_model, cfg.d_model))
     return p
@@ -160,6 +174,11 @@ def param_axes(cfg):
     if cfg.is_enc_dec:
         p["encoder"] = {"layers": _stack_axes(cfg, "encoder"),
                         "norm": L.norm_axes(cfg)}
+        if not cfg.frontend_stub:
+            p["encoder"]["frontend"] = {
+                "conv1_w": (None, None, "embed"), "conv1_b": ("embed",),
+                "conv2_w": (None, None, "embed"), "conv2_b": ("embed",),
+            }
     if cfg.vision_prefix:
         p["vision_proj"] = ("embed", None)
     return p
@@ -260,8 +279,25 @@ def _embed_inputs(params, batch, cfg):
 
 
 def _run_encoder(params, frames, cfg):
-    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
-    h = _residual_shard(frames.astype(jnp.bfloat16))
+    """Whisper encoder.  ``frames`` is (B, T, n_mels) mel frames fed to
+    the two-layer conv stem (k3 s1 + k3 s2, SAME, gelu — bias+gelu fused
+    into the conv deprime via the epilogue contract), or precomputed
+    (B, T, d_model) embeddings when ``cfg.frontend_stub``."""
+    if cfg.frontend_stub:
+        h = _residual_shard(frames.astype(jnp.bfloat16))
+    else:
+        from repro.core import facility
+        from repro.core.facility import Plan
+        from repro.kernels.epilogue import Epilogue
+        fe = params["encoder"]["frontend"]
+        gelu = Epilogue(bias=True, activation="gelu")
+        h = facility.contract(
+            facility.CONV1D, frames.astype(jnp.float32), fe["conv1_w"],
+            bias=fe["conv1_b"], plan=Plan(padding="same", epilogue=gelu))
+        h = facility.contract(
+            facility.CONV1D, h, fe["conv2_w"], bias=fe["conv2_b"],
+            plan=Plan(stride=2, padding="same", epilogue=gelu))
+        h = _residual_shard(h)
     b, s, _ = h.shape
     pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     cos_sin = _cos_sin_for(cfg, pos)
@@ -406,7 +442,8 @@ def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
             c["fd_k"] = jnp.zeros(fd, dtype)
             c["fd_v"] = jnp.zeros(fd, dtype)
         if cfg.is_enc_dec:
-            enc_len = seq_len
+            # conv stem downsamples the frame axis (stride-2 second layer)
+            enc_len = cfg.encoder_len(seq_len)
             xs = (cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
                   cfg.head_dim)
             c["cross_k"] = jnp.zeros(xs, dtype)

@@ -200,19 +200,23 @@ def _encdec_split(cfg) -> tuple[float, float]:
 def model_flops_for(cfg, shape_info) -> float:
     """6*N*D training / 2*N*D inference FLOPs (D = tokens processed).
 
-    Enc-dec archs split N: encoder params see seq (frames), decoder params
-    see decoder_len tokens."""
+    Enc-dec archs split N: encoder params see the post-conv-stem encoder
+    positions (``cfg.encoder_len(seq)`` — the stride-2 stem halves the
+    frame axis; the stub frontend passes seq through), decoder params see
+    decoder_len tokens."""
     n = cfg.active_param_count()
     b, s = shape_info["batch"], shape_info["seq"]
     if shape_info["kind"] == "train":
         if cfg.is_enc_dec:
             n_enc, n_dec = _encdec_split(cfg)
-            return 6.0 * b * (n_enc * s + n_dec * cfg.decoder_len)
+            return 6.0 * b * (n_enc * cfg.encoder_len(s)
+                              + n_dec * cfg.decoder_len)
         return 6.0 * n * b * s
     if shape_info["kind"] == "prefill":
         if cfg.is_enc_dec:
             n_enc, n_dec = _encdec_split(cfg)
-            return 2.0 * b * (n_enc * s + n_dec * cfg.decoder_len)
+            return 2.0 * b * (n_enc * cfg.encoder_len(s)
+                              + n_dec * cfg.decoder_len)
         return 2.0 * n * b * s
     # decode: one token per sequence
     return 2.0 * n * shape_info["batch"]

@@ -42,6 +42,50 @@ def test_dft_matches_fft(n, rng):
                                atol=1e-3)
 
 
+def test_twiddles_are_host_side_and_dtype_keyed():
+    """Regression: _twiddle once lru_cached device-resident f32 jnp arrays
+    keyed only by n — pinning buffers for the process lifetime and forcing
+    every non-f32 caller through an f32 round trip.  Twiddles are now host
+    numpy, keyed by (n, dtype)."""
+    wr32, wi32 = blas3._twiddle(16, "float32")
+    wrb, wib = blas3._twiddle(16, "bfloat16")
+    for arr in (wr32, wi32, wrb, wib):
+        assert isinstance(arr, np.ndarray), type(arr)
+    assert wr32.dtype == np.float32
+    assert wrb.dtype == jnp.dtype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_bf16_twiddles_not_f32_truncated_then_cast(n):
+    """bf16 twiddles must be rounded ONCE from the float64 angles — the
+    legacy device-side construction (f32 angles, f32 cos, cast) perturbs
+    hundreds of entries per matrix because f32 loses the large k^2 angles'
+    precision before range reduction."""
+    k = np.arange(n)
+    ang = -2.0 * np.pi * np.outer(k, k) / n
+    bf16 = jnp.dtype(jnp.bfloat16)
+    wr, wi = blas3._twiddle(n, "bfloat16")
+    np.testing.assert_array_equal(wr, np.cos(ang).astype(bf16))
+    np.testing.assert_array_equal(wi, np.sin(ang).astype(bf16))
+    # Non-vacuity: the legacy path really does differ, so the equality
+    # above fails loudly if the f32 intermediate ever comes back.
+    legacy = np.cos(ang.astype(np.float32)).astype(bf16)
+    assert (legacy != wr).any(), n
+
+
+def test_dft_bf16_inputs_use_bf16_twiddles(rng):
+    """A bf16 caller folds bf16-rounded twiddles (not f32 ones) and still
+    matches the fft to bf16 tolerance."""
+    n = 32
+    x = jnp.asarray(rng.normal(size=(n, 4)), jnp.bfloat16)
+    re, im = blas3.dft(x)
+    want = np.fft.fft(np.asarray(x, np.float32), axis=0)
+    np.testing.assert_allclose(np.asarray(re, np.float32), want.real,
+                               rtol=0.1, atol=0.35)
+    np.testing.assert_allclose(np.asarray(im, np.float32), want.imag,
+                               rtol=0.1, atol=0.35)
+
+
 def test_complex_gemm(rng):
     ar = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)
     ai = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)

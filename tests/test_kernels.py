@@ -182,6 +182,35 @@ def test_sconv_matches_oracle(n, h, w, c, kh, kw, f, rng):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,h,w,c,kh,kw,f,stride", [
+    (2, 8, 14, 5, 2, 3, 8, (1, 1)),   # C>1, KW>1: panel order is load-bearing
+    (1, 9, 17, 3, 3, 3, 16, (1, 1)),
+    (1, 10, 15, 4, 3, 3, 8, (2, 2)),  # strided shifts reorder the panel too
+])
+def test_sconv_fuse_kw_panel_matches_unfused(n, h, w, c, kh, kw, f, stride,
+                                             rng):
+    """Regression guard for the fused KW panel: the kw-major concatenation
+    in `_sconv_kernel` must match `w_ref.reshape(kw_total * c, -1)`'s
+    (kw, c) flattening.  Pin fuse_kw=True against fuse_kw=False and the
+    ref backend so a future reorder of either side fails loudly instead of
+    producing plausible-but-wrong convolutions."""
+    from repro.core import facility, lowering
+    img = jnp.asarray(rng.normal(size=(n, h, w, c)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(kh, kw, c, f)), jnp.float32)
+    fused = KC.mma_conv2d(img, ker, stride=stride, interpret=True,
+                          fuse_kw=True)
+    unfused = KC.mma_conv2d(img, ker, stride=stride, interpret=True,
+                            fuse_kw=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+    want = facility.contract(
+        facility.CONV2D, img, ker,
+        plan=lowering.Plan(ger=Ger.F32GER, backend="ref", stride=stride,
+                           out_dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_sconv_matches_lax_conv(rng):
     """Cross-check the oracle itself against lax.conv."""
     img = jnp.asarray(rng.normal(size=(2, 10, 24, 3)), jnp.float32)

@@ -477,6 +477,263 @@ def test_label_size_mismatch_raises(rng):
 
 
 # ----------------------------------------------------------------------
+# Conv op-class: the canonical conv specs on every backend
+# ----------------------------------------------------------------------
+
+def _lax_conv(img, ker, stride, padding):
+    return jax.lax.conv_general_dilated(
+        img, ker, stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@pytest.mark.parametrize("stride,padding", [
+    ((1, 1), "valid"), ((2, 2), "same"), ((2, 3), "valid")])
+def test_conv2d_backends_agree(stride, padding, rng):
+    """facility.CONV2D lowers equivalently on pallas/xla/ref and matches
+    the lax.conv oracle, across strides and paddings."""
+    assert set(lowering.backends_for("conv", Ger.F32GER)) \
+        == {"pallas", "xla", "ref"}
+    img = jnp.asarray(rng.normal(size=(2, 10, 13, 3)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 3, 8)), jnp.float32)
+    want = _lax_conv(img, ker, stride, padding.upper())
+    lowering.DISPATCH_COUNTS.clear()
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            facility.CONV2D, img, ker,
+            plan=Plan(ger=Ger.F32GER, backend=backend, stride=stride,
+                      padding=padding, out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+        assert lowering.DISPATCH_COUNTS[
+            (backend, "conv", Ger.F32GER.value)] == 1
+
+
+def test_conv1d_stride2_same_backends_agree(rng):
+    """The whisper-stem shape: 1-D conv, stride 2, SAME, fused bias+gelu."""
+    x = jnp.asarray(rng.normal(size=(2, 16, 5)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 5, 8)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    want = _lax_conv(x[:, None], w[None], (1, 2), "SAME")[:, 0]
+    want = np.asarray(E.apply(jnp.asarray(want),
+                              E.Epilogue(bias=True, activation="gelu"),
+                              bias=bias))
+    outs = [facility.contract(
+        facility.CONV1D, x, w, bias=bias,
+        plan=Plan(ger=Ger.F32GER, backend=b, stride=2, padding="same",
+                  epilogue=E.Epilogue(bias=True, activation="gelu"),
+                  out_dtype=jnp.float32))
+        for b in ("pallas", "xla", "ref")]
+    for b, got in zip(("pallas", "xla", "ref"), outs):
+        assert got.shape == (2, 8, 8), b
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=b)
+
+
+@pytest.mark.parametrize("padding", ["causal", "valid"])
+def test_depthwise_conv1d_backends_agree(padding, rng):
+    """The mamba2 causal-conv shape: per-channel taps, left padding."""
+    x = jnp.asarray(rng.normal(size=(2, 9, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    xin = jnp.pad(x, ((0, 0), (3, 0), (0, 0))) if padding == "causal" else x
+    ol = xin.shape[1] - 3
+    want = sum(np.asarray(xin[:, i:i + ol, :], np.float64) * np.asarray(
+        w[i], np.float64) for i in range(4))
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            facility.CONV1D_DEPTHWISE, x, w,
+            plan=Plan(ger=Ger.F32GER, backend=backend, padding=padding,
+                      out_dtype=jnp.float32))
+        assert got.shape == (2, ol, 6), backend
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-5, err_msg=backend)
+
+
+def test_conv_bf16_policy_casts_inputs(rng):
+    """A BF16GER2 conv plan rounds the operands to bf16 before the update
+    (the family's architected input dtype) on every backend."""
+    img = jnp.asarray(rng.normal(size=(1, 6, 8, 4)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    want = _lax_conv(img.astype(jnp.bfloat16).astype(jnp.float32),
+                     ker.astype(jnp.bfloat16).astype(jnp.float32),
+                     (1, 1), "VALID")
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            facility.CONV2D, img, ker,
+            plan=Plan(ger=Ger.BF16GER2, backend=backend,
+                      out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_conv_3xbf16_expansion_applies(rng):
+    """Regression: a F32GER_3XBF16 conv plan must run the family's three
+    chained BF16GER2 passes (conv is bilinear, so the hi/lo split applies
+    exactly as for GEMM) — not a silent plain-f32 convolution."""
+    img = jnp.asarray(rng.normal(size=(2, 4, 6, 16)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(1, 1, 16, 8)), jnp.float32)
+    # A 1x1 conv IS a GEMM: the gemm op-class's 3xbf16 chain is the oracle.
+    want = facility.contract(
+        "mk,kn->mn", img.reshape(-1, 16), ker.reshape(16, 8),
+        plan=Plan(ger=Ger.F32GER_3XBF16, backend="ref",
+                  out_dtype=jnp.float32)).reshape(2, 4, 6, 8)
+    f32 = facility.contract(
+        facility.CONV2D, img, ker,
+        plan=Plan(ger=Ger.F32GER, backend="ref", out_dtype=jnp.float32))
+    assert float(jnp.abs(want - f32).max()) > 0  # families ARE distinct
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            facility.CONV2D, img, ker,
+            plan=Plan(ger=Ger.F32GER_3XBF16, backend=backend,
+                      out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=backend)
+
+
+def test_depthwise_pallas_plan_counts_as_xla(rng):
+    """Regression: the pallas->xla conv reroute (depthwise has no MXU
+    rank to fold) happens before dispatch counting, so observability
+    names the backend that actually ran."""
+    x = jnp.asarray(rng.normal(size=(1, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    facility.contract(facility.CONV1D_DEPTHWISE, x, w,
+                      plan=Plan(ger=Ger.F32GER, backend="pallas",
+                                padding="causal", out_dtype=jnp.float32))
+    assert lowering.DISPATCH_COUNTS[("xla", "conv", Ger.F32GER.value)] == 1
+    assert not any(k[0] == "pallas" for k in lowering.DISPATCH_COUNTS)
+
+
+def test_causal_padding_is_1d_only(rng):
+    img = jnp.zeros((1, 6, 8, 4), jnp.float32)
+    ker = jnp.zeros((3, 3, 4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="causal padding is 1-D"):
+        facility.contract(facility.CONV2D, img, ker,
+                          plan=Plan(ger=Ger.F32GER, padding="causal"))
+
+
+def test_conv_rejects_acc_and_forms(rng):
+    img = jnp.zeros((1, 6, 8, 4), jnp.float32)
+    ker = jnp.zeros((3, 3, 4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="conv contractions"):
+        facility.contract(facility.CONV2D, img, ker,
+                          acc=jnp.zeros((1, 4, 6, 8), jnp.float32),
+                          plan=Plan(ger=Ger.F32GER))
+    with pytest.raises(ValueError, match="conv contractions"):
+        facility.contract(facility.CONV2D, img, ker,
+                          plan=Plan(ger=Ger.F32GER, alpha=2.0))
+    # and stride/padding are conv-only vocabulary
+    x = jnp.zeros((4, 8), jnp.float32)
+    y = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(ValueError, match="conv specs only"):
+        facility.contract("mk,kn->mn", x, y, plan=Plan(stride=2))
+
+
+def test_whisper_frontend_routes_through_conv_op_class():
+    """De-stubbed whisper: the encoder conv stem dispatches two conv-class
+    contractions per forward (frontend_stub is OFF in the config)."""
+    from repro.configs import get
+    from repro.configs.base import reduced
+    from repro.models import model as M
+    cfg = reduced(get("whisper-small"))
+    assert not cfg.frontend_stub and cfg.n_mels > 0
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = {"tokens": jnp.zeros((1, cfg.decoder_len), jnp.int32),
+             "labels": jnp.zeros((1, cfg.decoder_len), jnp.int32),
+             "frames": jnp.ones((1, 16, cfg.n_mels), jnp.float32)}
+    lowering.DISPATCH_COUNTS.clear()
+    logits, _, _ = M.forward(params, batch, cfg)
+    conv_calls = sum(v for k, v in lowering.DISPATCH_COUNTS.items()
+                     if k[1] == "conv")
+    assert conv_calls == 2, dict(lowering.DISPATCH_COUNTS)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_mamba_causal_conv_routes_through_conv_op_class(rng):
+    """The mamba2 depthwise causal conv is a registry dispatch now."""
+    from repro.models import mamba2 as M2
+    x = jnp.asarray(rng.normal(size=(2, 8, 6)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    b = jnp.zeros((6,), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    out, state = M2._causal_conv(x, w, b)
+    assert sum(v for k, v in lowering.DISPATCH_COUNTS.items()
+               if k[1] == "conv") == 1
+    assert out.shape == x.shape and out.dtype == x.dtype
+    assert state.shape == (2, 3, 6)
+    # matches the hand-rolled shift-and-sum it replaced
+    xin = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    want = jax.nn.silu(sum(
+        xin[:, i:i + 8, :].astype(jnp.float32) * w[i] for i in range(4)) + b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ----------------------------------------------------------------------
+# Complex op-class: four real accumulate-form gers (pp/np)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", [Ger.F32GER, Ger.BF16GER2, Ger.F16GER2],
+                         ids=lambda k: k.value)
+def test_complex_backends_agree(kind, rng):
+    assert set(lowering.backends_for("complex", kind)) \
+        == {"pallas", "xla", "ref"}
+    ar, ai = rng.normal(size=(16, 24)), rng.normal(size=(16, 24))
+    br, bi = rng.normal(size=(24, 8)), rng.normal(size=(24, 8))
+    a = jnp.asarray(ar + 1j * ai, jnp.complex64)
+    b = jnp.asarray(br + 1j * bi, jnp.complex64)
+    outs = {}
+    lowering.DISPATCH_COUNTS.clear()
+    for backend in ("pallas", "xla", "ref"):
+        outs[backend] = facility.contract(
+            "mk,kn->mn", a, b,
+            plan=Plan(ger=kind, backend=backend, out_dtype=lowering.ACC))
+        assert lowering.DISPATCH_COUNTS[
+            (backend, "complex", kind.value)] == 1
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        _assert_close(kind, np.asarray(got).real, ref.real)
+        _assert_close(kind, np.asarray(got).imag, ref.imag)
+    if kind == Ger.F32GER:   # exact-dtype family: compare to numpy too
+        want = (ar + 1j * ai) @ (br + 1j * bi)
+        np.testing.assert_allclose(ref, want, rtol=1e-4, atol=1e-4)
+
+
+def test_complex_np_accumulate_form_backends_agree(rng):
+    """The negative-product (np) form with a complex accumulator seed —
+    the accumulate form only blas3.complex_gemm's hand-coded chain used to
+    exercise: out = C - X @ Y."""
+    a = jnp.asarray(rng.normal(size=(8, 12)) + 1j * rng.normal(size=(8, 12)),
+                    jnp.complex64)
+    b = jnp.asarray(rng.normal(size=(12, 6)) + 1j * rng.normal(size=(12, 6)),
+                    jnp.complex64)
+    c = jnp.asarray(rng.normal(size=(8, 6)) + 1j * rng.normal(size=(8, 6)),
+                    jnp.complex64)
+    want = np.asarray(c) - np.asarray(a) @ np.asarray(b)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "mk,kn->mn", a, b, acc=c,
+            plan=Plan(ger=Ger.F32GER, backend=backend, neg_product=True,
+                      out_dtype=lowering.ACC))
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_complex_rejects_epilogue_and_batch(rng):
+    a = jnp.zeros((4, 8), jnp.complex64)
+    b = jnp.zeros((8, 4), jnp.complex64)
+    bias = jnp.zeros((4,), jnp.float32)
+    with pytest.raises(ValueError, match="complex contractions"):
+        facility.contract("mk,kn->mn", a, b, bias=bias,
+                          plan=Plan(ger=Ger.F32GER,
+                                    epilogue=E.Epilogue(bias=True)))
+    with pytest.raises(ValueError, match="unbatched"):
+        facility.contract("bmk,bkn->bmn", jnp.zeros((2, 4, 8), jnp.complex64),
+                          jnp.zeros((2, 8, 4), jnp.complex64),
+                          plan=Plan(ger=Ger.F32GER))
+
+
+# ----------------------------------------------------------------------
 # Registry mechanics
 # ----------------------------------------------------------------------
 

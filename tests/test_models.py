@@ -19,7 +19,8 @@ def _batch_for(cfg, batch=2, seq=32):
                                               (batch, seq)), jnp.int32)}
     b["labels"] = jnp.roll(b["tokens"], -1, axis=1)
     if cfg.is_enc_dec:
-        b["frames"] = jnp.ones((batch, seq, cfg.d_model), jnp.float32)
+        frame_dim = cfg.d_model if cfg.frontend_stub else cfg.n_mels
+        b["frames"] = jnp.ones((batch, seq, frame_dim), jnp.float32)
         dl = cfg.decoder_len
         b["tokens"] = jnp.zeros((batch, dl), jnp.int32)
         b["labels"] = jnp.zeros((batch, dl), jnp.int32)
