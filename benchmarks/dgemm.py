@@ -1,4 +1,4 @@
-"""Fig. 11 analogue: DGEMM N x 128 @ 128 x N sweep.
+"""Fig. 11 analogue: DGEMM N x 128 @ 128 x N sweep (+ batched sweep).
 
 The paper measures flops/cycle on real silicon.  This container is CPU, so
 we report (a) measured CPU wall time of the facility GEMM (XLA path — the
@@ -9,6 +9,13 @@ gap is tracked across PRs.  The projection is the same "% of peak vs
 problem size" curve as the paper's Figure 11 (26 flops/cycle = 81% of peak
 on POWER10-MMA at N >= 512); the autotuned column must never fall below
 the heuristic one (tests/test_autotune.py holds the invariant).
+
+The batched rows (``bgemm_B<b>_N<n>``) track the grid-native-batch win:
+the same (B, M, K) x (B, K, N) contraction dispatched as one batched
+``pallas_call`` (grid (b, i, j, k)) versus a ``jax.vmap`` of the 2-D
+kernel — measured wall clock of both, plus the v5e roofline projection
+where the vmapped trace is charged B kernel-launch overheads and the
+grid-native launch exactly one.
 """
 
 import jax
@@ -19,6 +26,7 @@ from benchmarks.common import emit, time_fn
 from repro.core import autotune, tiling
 from repro.core.precision import Ger, policy
 from repro.kernels import ref
+from repro.kernels.mma_gemm import mma_gemm
 from repro.roofline.analysis import gemm_projected_util
 
 
@@ -45,3 +53,27 @@ def run():
              f"v5e_util_autotuned={util_tuned:.3f};"
              f"block_heuristic={heur.bm}x{heur.bn}x{heur.bk};"
              f"block_autotuned={tuned.bm}x{tuned.bn}x{tuned.bk}")
+
+    # ---- batched sweep: vmapped trace vs grid-native batch ----
+    b = 8
+    for n in (128, 256):
+        m, k = n, 128
+        cfg = tiling.choose_blocks(m, n, k, kind)
+        blk = (cfg.bm, cfg.bn, cfg.bk)
+        xb = jnp.asarray(rng.normal(size=(b, m, k)), jnp.bfloat16)
+        yb = jnp.asarray(rng.normal(size=(b, k, n)), jnp.bfloat16)
+
+        grid_native = jax.jit(lambda a, c: mma_gemm(
+            a, c, kind=kind, block=blk, interpret=True))
+        vmapped = jax.jit(jax.vmap(lambda a, c: mma_gemm(
+            a, c, kind=kind, block=blk, interpret=True)))
+        us_grid = time_fn(grid_native, xb, yb)
+        us_vmapped = time_fn(vmapped, xb, yb)
+        util_grid = gemm_projected_util(m, n, k, cfg, pol, b=b, launches=1)
+        util_vmap = gemm_projected_util(m, n, k, cfg, pol, b=b, launches=b)
+        emit(f"bgemm_B{b}_N{n}", us_grid,
+             f"us_grid_native={us_grid:.1f};"
+             f"us_vmapped={us_vmapped:.1f};"
+             f"v5e_util_grid_native={util_grid:.3f};"
+             f"v5e_util_vmapped={util_vmap:.3f};"
+             f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")

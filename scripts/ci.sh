@@ -31,6 +31,17 @@ if grep -rnE "lax\.(dot_general|conv_general_dilated)\(" src --include="*.py" \
 fi
 echo "lax purity OK"
 
+# The grid owns batch: batched contractions fold the batch axis into the
+# Pallas grid ((b, i, j, k) BlockSpecs), so kernel dispatch in the lowering
+# layer must never wrap a kernel in jax.vmap (one launch per contraction,
+# autotune-cache keyed per (b, m, n, k)).
+if grep -nE "jax\.vmap|jax\.numpy\.vectorize" src/repro/core/lowering.py; then
+    echo "FAIL: jax.vmap around kernel dispatch in core/lowering.py —" \
+         "batch is a grid dimension of the Pallas kernel" >&2
+    exit 1
+fi
+echo "grid-owns-batch OK"
+
 echo "== tier-1 tests =="
 # tests/conftest.py escalates the deprecated shims' DeprecationWarnings to
 # errors for in-repo (repro.*) callers.
@@ -48,5 +59,12 @@ for n in (128, 256, 512, 1024, 2048):
     d = rows[f"dgemm_N{n}"]
     assert d["v5e_util_autotuned"] >= d["v5e_util_heuristic"], (n, d)
 print("BENCH_dgemm.json OK: autotuned >= heuristic on every N")
+for n in (128, 256):
+    d = rows[f"bgemm_B8_N{n}"]
+    # vmapped-vs-grid-native columns must both be present and the
+    # projection must charge the vmapped trace its extra kernel launches.
+    assert d["us_vmapped"] > 0 and d["us_grid_native"] > 0, (n, d)
+    assert d["v5e_util_grid_native"] > d["v5e_util_vmapped"], (n, d)
+print("BENCH_dgemm.json OK: batched sweep tracks grid-native vs vmapped")
 EOF
 fi

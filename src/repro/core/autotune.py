@@ -29,6 +29,9 @@ Cache file format (DESIGN.md section 3)::
      "entries": {"<kind>|<M>x<N>x<K>|<epilogue>|<backend>":
                  {"block": [bm, bn, bk], "source": "measured"|"traced",
                   "score": <seconds, projected or measured>}}}
+
+Grid-native batched shapes (b > 1) key as ``<kind>|b<B>x<M>x<N>x<K>|...``
+so a batched launch tunes separately from the same per-element shape.
 """
 
 from __future__ import annotations
@@ -54,9 +57,16 @@ TOP_K = 4
 
 
 def cache_key(kind: precision.Ger, m: int, n: int, k: int,
-              epilogue_key: str = "none", backend: str | None = None) -> str:
+              epilogue_key: str = "none", backend: str | None = None,
+              b: int = 1) -> str:
+    """Winner-store key.  Batched shapes (grid-native batch, b > 1) key
+    separately — ``b<B>x<M>x<N>x<K>`` — because TPU wall-clock at the same
+    per-element shape differs with the batch grid axis present; b == 1
+    keeps the legacy 3-dim format (a 1-element batch runs the same tiles
+    as the unbatched kernel)."""
     backend = backend or jax.default_backend()
-    return f"{kind.value}|{m}x{n}x{k}|{epilogue_key}|{backend}"
+    shape = f"b{b}x{m}x{n}x{k}" if b > 1 else f"{m}x{n}x{k}"
+    return f"{kind.value}|{shape}|{epilogue_key}|{backend}"
 
 
 class AutotuneCache:
@@ -121,12 +131,13 @@ def default_cache() -> AutotuneCache:
 
 def lookup(kind: precision.Ger, m: int, n: int, k: int,
            epilogue_key: str = "none", backend: str | None = None,
-           cache: AutotuneCache | None = None) -> tiling.BlockConfig | None:
-    """Cache-only consult (what ``ops.mma_dot`` does on dispatch) — never
+           cache: AutotuneCache | None = None,
+           b: int = 1) -> tiling.BlockConfig | None:
+    """Cache-only consult (what the registry does on dispatch) — never
     triggers a search; returns None on miss so dispatch falls back to the
     ``choose_blocks`` heuristic."""
     cache = cache if cache is not None else default_cache()
-    cfg = cache.get(cache_key(kind, m, n, k, epilogue_key, backend))
+    cfg = cache.get(cache_key(kind, m, n, k, epilogue_key, backend, b))
     if cfg is not None:
         try:
             tiling.assert_fits_vmem(cfg, kind)
@@ -150,6 +161,10 @@ def candidate_blocks(m: int, n: int, k: int, kind: precision.Ger,
     is bounded to the top-K.  The heuristic ``choose_blocks`` pick is
     always included, which guarantees the tuned result is never ranked
     worse than the heuristic under the shared model.
+
+    The frontier is per-element, hence batch-invariant: the grid batch
+    axis takes 1-deep blocks, so b never changes what fits (only the
+    batched *measurement* and its (b, m, n, k) cache key differ).
 
     Note a config larger in every block dim is not automatically better:
     fringe padding is charged by the prior (pad(100, 64) = 128 rows but
@@ -179,39 +194,42 @@ def candidate_blocks(m: int, n: int, k: int, kind: precision.Ger,
 
 
 def predicted_time(m: int, n: int, k: int, cfg: tiling.BlockConfig,
-                   kind: precision.Ger) -> float:
+                   kind: precision.Ger, b: int = 1) -> float:
     """The ranking prior: kernel-level roofline seconds on the v5e model."""
     pol = precision.policy(kind)
-    return _roofline.gemm_projected_time(m, n, k, cfg, pol)
+    return _roofline.gemm_projected_time(m, n, k, cfg, pol, b=b)
 
 
 # ----------------------------------------------------------------------
 # Measurement
 # ----------------------------------------------------------------------
 
-def _operands(m: int, n: int, k: int, kind: precision.Ger):
+def _operands(m: int, n: int, k: int, kind: precision.Ger, b: int = 1):
     pol = precision.policy(kind)
     rng = np.random.default_rng(0)
+    lead = (b,) if b > 1 else ()
     if pol.packed_int4:
-        x = jnp.asarray(rng.integers(-128, 128, (m, k // 2)), jnp.int8)
-        y = jnp.asarray(rng.integers(-128, 128, (k // 2, n)), jnp.int8)
+        x = jnp.asarray(rng.integers(-128, 128, lead + (m, k // 2)), jnp.int8)
+        y = jnp.asarray(rng.integers(-128, 128, lead + (k // 2, n)), jnp.int8)
     elif jnp.issubdtype(pol.acc_dtype, jnp.integer):
-        x = jnp.asarray(rng.integers(-100, 100, (m, k)), pol.x_dtype)
+        x = jnp.asarray(rng.integers(-100, 100, lead + (m, k)), pol.x_dtype)
         hi = 256 if jnp.dtype(pol.y_dtype) == jnp.uint8 else 100
         lo = 0 if jnp.dtype(pol.y_dtype) == jnp.uint8 else -100
-        y = jnp.asarray(rng.integers(lo, hi, (k, n)), pol.y_dtype)
+        y = jnp.asarray(rng.integers(lo, hi, lead + (k, n)), pol.y_dtype)
     else:
-        x = jnp.asarray(rng.normal(size=(m, k)), pol.x_dtype)
-        y = jnp.asarray(rng.normal(size=(k, n)), pol.y_dtype)
+        x = jnp.asarray(rng.normal(size=lead + (m, k)), pol.x_dtype)
+        y = jnp.asarray(rng.normal(size=lead + (k, n)), pol.y_dtype)
     return x, y
 
 
-def _measure_wall_us(m, n, k, kind, cfg, *, interpret, warmup=1, iters=3):
-    """Median wall time (us) of the real pallas_call at this config."""
+def _measure_wall_us(m, n, k, kind, cfg, *, interpret, warmup=1, iters=3,
+                     b=1):
+    """Median wall time (us) of the real pallas_call at this config —
+    batched shapes measure the grid-native batched launch."""
     import time
 
     from repro.kernels import mma_gemm as _gemm
-    x, y = _operands(m, n, k, kind)
+    x, y = _operands(m, n, k, kind, b)
 
     # jit the call so timed iterations measure the kernel, not per-call
     # Python tracing/dispatch of the pallas_call.
@@ -255,7 +273,7 @@ def _validate_interpret(m, n, k, kind, cfg) -> bool:
         return False
 
 
-def autotune(kind: precision.Ger, m: int, n: int, k: int, *,
+def autotune(kind: precision.Ger, m: int, n: int, k: int, *, b: int = 1,
              epilogue_key: str = "none", backend: str | None = None,
              cache: AutotuneCache | None = None, top_k: int = TOP_K,
              force: bool = False) -> tiling.BlockConfig:
@@ -265,20 +283,23 @@ def autotune(kind: precision.Ger, m: int, n: int, k: int, *,
     frontier by the roofline prior; on TPU the top-K are timed with real
     pallas_call executions, on CPU the prior IS the score (traced-cost
     fallback) and the winner is validated with a one-tile interpret run.
+    ``b > 1`` tunes the grid-native batched launch under its own
+    ``(b, m, n, k)`` cache key.
     """
     backend = backend or jax.default_backend()
     cache = cache if cache is not None else default_cache()
-    key = cache_key(kind, m, n, k, epilogue_key, backend)
+    key = cache_key(kind, m, n, k, epilogue_key, backend, b)
     if not force:
         hit = cache.get(key)
         if hit is not None:
             return hit
 
     cands = candidate_blocks(m, n, k, kind)
-    ranked = sorted(cands, key=lambda c: predicted_time(m, n, k, c, kind))
+    ranked = sorted(cands, key=lambda c: predicted_time(m, n, k, c, kind, b))
 
     if backend == "tpu":
-        scored = [(c, _measure_wall_us(m, n, k, kind, c, interpret=False))
+        scored = [(c, _measure_wall_us(m, n, k, kind, c, interpret=False,
+                                       b=b))
                   for c in ranked[:top_k]]
         best, score = min(scored, key=lambda cs: cs[1])
         source = "measured"
@@ -288,11 +309,11 @@ def autotune(kind: precision.Ger, m: int, n: int, k: int, *,
         best, score = None, float("inf")
         for c in ranked[:top_k]:
             if _validate_interpret(m, n, k, kind, c):
-                best, score = c, predicted_time(m, n, k, c, kind)
+                best, score = c, predicted_time(m, n, k, c, kind, b)
                 break
         if best is None:  # every candidate failed: fall back to heuristic
             best = tiling.choose_blocks(m, n, k, kind)
-            score = predicted_time(m, n, k, best, kind)
+            score = predicted_time(m, n, k, best, kind, b)
         source = "traced"
 
     tiling.assert_fits_vmem(best, kind)

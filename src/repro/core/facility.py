@@ -86,7 +86,8 @@ def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray, *,
              acc: jnp.ndarray | None = None,
              bias: jnp.ndarray | None = None,
              residual: jnp.ndarray | None = None,
-             dequant: Dequant | None = None) -> jnp.ndarray:
+             dequant: Dequant | None = None,
+             masks: tuple | None = None) -> jnp.ndarray:
     """The facility's single architected builtin.
 
     ``spec`` names the contraction; ``plan`` (static) selects ger family,
@@ -94,15 +95,21 @@ def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray, *,
     unset fields resolve against the ambient :class:`FacilityConfig`.
     ``acc`` seeds the accumulator (the pp/np/pn/nn forms, scaled by
     ``plan.beta``); ``bias``/``residual`` are the fused-epilogue operands;
-    ``dequant`` is the quant path's deprime rescale.
+    ``dequant`` is the quant path's deprime rescale; ``masks`` =
+    ``(xmask, ymask, pmask)`` bool predicates on the normalized M/N/K
+    axes (the pm* prefixed masked forms, paper section II-C — the Pallas
+    lowering applies them to the streamed panels in-kernel, never
+    pre-masking operands in HBM).
 
     Dispatch goes through the lowering registry (``repro.core.lowering``):
     specs that normalize to (batched) 2-D GEMMs reach the autotuned Pallas
-    kernels or the shardable ``lax.dot_general`` lowering; everything else
-    falls back to the general einsum lowering.
+    kernels — batch rides as a grid dimension, one ``pallas_call`` per
+    contraction — or the shardable ``lax.dot_general`` lowering;
+    everything else falls back to the general einsum lowering.
     """
     return lowering.execute(spec, x, y, cfg=current(), plan=plan, acc=acc,
-                            bias=bias, residual=residual, dequant=dequant)
+                            bias=bias, residual=residual, dequant=dequant,
+                            masks=masks)
 
 
 # ----------------------------------------------------------------------

@@ -17,10 +17,14 @@ Lowerings register per ``(backend, op_class, ger, fused)`` key:
     CPU), ``"xla"`` (one ``lax.dot_general`` the SPMD partitioner can
     shard), ``"ref"`` (eager architected oracles — ground truth).
   * ``op_class``: ``"gemm"`` (any spec that normalizes to a — possibly
-    batched — 2-D GEMM), ``"gemm.saturating"`` (xvi16ger2s-style clamped
-    accumulation), ``"conv"`` (the canonical NHWC conv specs — normalized
-    to the implicit-im2col rank-(KW*C) update form), ``"complex"``
-    (complex-dtype operands — four real accumulate-form gers, pp/np),
+    batched — 2-D GEMM; batch is a grid dimension of the Pallas kernel,
+    never a vmapped re-trace), ``"gemm.masked"`` (the pm* prefixed masked
+    forms — row/column/rank predicates fused into the kernel's VMEM panel
+    loads, paper section II-C), ``"gemm.saturating"`` (xvi16ger2s-style
+    clamped accumulation), ``"conv"`` (the canonical NHWC conv specs —
+    normalized to the implicit-im2col rank-(KW*C) update form; depthwise
+    runs a resident-accumulator VPU kernel), ``"complex"`` (complex-dtype
+    operands — four real accumulate-form gers, pp/np, batched or not),
     ``"einsum"`` (general contraction fallback).
   * ``ger``/``fused``: optional specializations; lookup falls back from the
     most specific key to ``(backend, op_class, None, None)``.
@@ -170,6 +174,18 @@ class ParsedSpec:
                 and len(self.y_free) == 1 and len(self.contract) == 1
                 and self.x_labels == (self.x_free[0], self.contract[0])
                 and self.y_labels == (self.contract[0], self.y_free[0])
+                and self.out_perm is None)
+
+    @property
+    def is_natural_gemm(self) -> bool:
+        """True when operands/output are already in the normalized
+        (batch..., M, K) x (batch..., K, N) -> (batch..., M, N) layout
+        with single M/N/K labels — the layout the masked op-class requires
+        so its (M,), (N,), (K,) predicates name unambiguous axes."""
+        return (len(self.x_free) == 1 and len(self.y_free) == 1
+                and len(self.contract) == 1
+                and self.x_labels == self.batch + self.x_free + self.contract
+                and self.y_labels == self.batch + self.contract + self.y_free
                 and self.out_perm is None)
 
 
@@ -436,15 +452,16 @@ def rep_kind(ger: Ger) -> Ger:
 
 def resolve_block(kind: Ger, m: int, n: int, k: int,
                   block: tuple[int, int, int] | None,
-                  epilogue_key: str = "none"):
+                  epilogue_key: str = "none", b: int = 1):
     """Dispatch-time autotune-cache consult (outside jit, so later tuning
     is picked up on the next call instead of being frozen into a trace).
-    Explicit ``block`` wins; then a cached winner; else None ->
+    Explicit ``block`` wins; then a cached winner — batched contractions
+    consult their own ``(b, m, n, k)`` key; else None ->
     ``tiling.choose_blocks`` inside the kernel."""
     if block is not None:
         return block
     from repro.core import autotune as _autotune
-    cfg = _autotune.lookup(rep_kind(kind), m, n, k, epilogue_key)
+    cfg = _autotune.lookup(rep_kind(kind), m, n, k, epilogue_key, b=b)
     return (cfg.bm, cfg.bn, cfg.bk) if cfg is not None else None
 
 
@@ -476,6 +493,9 @@ class Op:
     backend: str = "xla"              # the backend this op dispatched to
     stride: tuple[int, ...] = ()      # conv op-class: per-spatial-dim stride
     padding: str = "valid"            # conv op-class: valid | same | causal
+    # gemm.masked op-class: (xmask (M,), ymask (N,), pmask (K,)) bool
+    # predicates on the normalized GEMM axes; each entry may be None.
+    masks: tuple | None = None
 
     @property
     def fused(self) -> bool:
@@ -556,19 +576,21 @@ def _combine_expanded(op: Op, prod, acc_seed, residual):
 @functools.partial(jax.jit, static_argnames=(
     "kind", "block", "interpret", "out_dtype", "epilogue", "neg_product",
     "neg_acc", "alpha", "beta"))
-def _pallas_gemm_impl(x, y, c, bias, residual, *, kind, block, interpret,
-                      out_dtype, epilogue, neg_product, neg_acc, alpha,
-                      beta):
+def _pallas_gemm_impl(x, y, c, bias, residual, xmask, ymask, pmask, *,
+                      kind, block, interpret, out_dtype, epilogue,
+                      neg_product, neg_acc, alpha, beta):
     from repro.kernels import mma_gemm as _gemm
     pol = precision.policy(kind)
     x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
     y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
     ep = epilogue if epilogue is not None and not epilogue.is_identity \
         else None
+    masks = ((xmask, ymask, pmask)
+             if any(m is not None for m in (xmask, ymask, pmask)) else None)
     return _gemm.mma_gemm(x, y, c, kind=kind, block=block,
                           neg_product=neg_product, neg_acc=neg_acc,
                           alpha=alpha, beta=beta,
-                          ep=ep, bias=bias, residual=residual,
+                          ep=ep, bias=bias, residual=residual, masks=masks,
                           out_dtype=out_dtype, interpret=interpret)
 
 
@@ -598,41 +620,38 @@ def _xla_gemm_impl(x, y, c, bias, residual, *, kind, dnums, out_perm,
 
 
 @register("pallas", "gemm")
+@register("pallas", "gemm.masked")
 def _lower_pallas_gemm(op: Op):
+    """Batch is a grid dimension: batched specs issue ONE ``pallas_call``
+    over grid (b, i, j, k) — never a vmapped per-element re-trace — with
+    accumulate forms, fused epilogues, and expansion chains threading
+    through unchanged.  The masked op-class streams its pm* predicates
+    into the same kernel as VMEM operands."""
     x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
     pack = 2 if op.pol.packed_int4 else 1
     block = resolve_block(op.ger, m, n, k * pack, op.block,
-                          op.epilogue.key)
+                          op.epilogue.key, b=b or 1)
     passes = _passes(op.ger, x2, y2)
+    xm, ym, pm = op.masks if op.masks is not None else (None, None, None)
 
-    res2 = (op.residual.reshape(m, n)
-            if op.residual is not None and b is None else op.residual)
-    # acc arrives in the spec's output shape; the kernel wants (M, N)
-    acc2 = (op.acc.reshape(m, n)
-            if op.acc is not None and b is None else op.acc)
+    # acc/residual arrive in the spec's output shape; the kernel wants
+    # (M, N) — or (B, M, N) with the batch axis folded.
+    norm = (m, n) if b is None else (b, m, n)
+    res2 = (op.residual.reshape(norm)
+            if op.residual is not None else None)
+    acc2 = op.acc.reshape(norm) if op.acc is not None else None
 
     def one(kind, xi, yi, c, ep, out_dtype, *, forms=True):
-        fn = functools.partial(
-            _pallas_gemm_impl, kind=kind, block=block,
+        use_ep = ep is not None and not ep.is_identity
+        return _pallas_gemm_impl(
+            xi, yi, c, op.bias if use_ep else None,
+            res2 if use_ep else None, xm, ym, pm,
+            kind=kind, block=block,
             interpret=op.interpret, out_dtype=out_dtype, epilogue=ep,
             neg_product=op.neg_product and forms,
             neg_acc=op.neg_acc and forms,
             alpha=op.alpha if forms else 1.0,
             beta=op.beta if forms else 1.0)
-        use_ep = ep is not None and not ep.is_identity
-        if b is None:
-            return fn(xi, yi, c, op.bias if use_ep else None,
-                      res2 if use_ep else None)
-        if c is None:
-            return jax.vmap(lambda a, bb: fn(a, bb, None, None, None))(
-                xi, yi)
-        return jax.vmap(lambda a, bb, cc: fn(a, bb, cc, None, None))(
-            xi, yi, c)
-
-    if b is not None and (op.acc is not None or op.fused):
-        raise ValueError(
-            f"batched contraction {op.spec!r} does not take an accumulator "
-            f"input or a fused epilogue")
 
     if len(passes) == 1:
         xi, yi, kind = passes[0]
@@ -693,20 +712,49 @@ def _lower_xla_gemm(op: Op):
     return _combine_expanded(op, prod, op.acc, op.residual)
 
 
+@register("xla", "gemm.masked")
+def _lower_xla_masked(op: Op):
+    """pm* masked forms on the shardable backend: the predicates fold into
+    the operands as selects (execute() guarantees the natural normalized
+    layout, so the masks name the trailing axes directly) and the plain
+    gemm lowering runs unchanged — XLA fuses the selects into the dot's
+    operand reads."""
+    x2, y2 = _fold_masks(op.x, op.y, op.masks)
+    return _lower_xla_gemm(dataclasses.replace(op, x=x2, y=y2, masks=None))
+
+
+def _fold_masks(x2, y2, masks):
+    """Fold the pm* predicates into normalized operands (xla/ref masked
+    lowerings; the Pallas kernel streams them into VMEM instead).
+    Matches the kernel: disabled lanes become exact zeros via select, and
+    the rank predicate zeroes BOTH panels.  The 2-D mask reshapes
+    right-align-broadcast over any leading batch axes."""
+    xm, ym, pm = masks
+    if xm is not None:
+        x2 = jnp.where(xm.reshape(-1, 1), x2, jnp.zeros_like(x2))
+    if pm is not None:
+        x2 = jnp.where(pm.reshape(1, -1), x2, jnp.zeros_like(x2))
+        y2 = jnp.where(pm.reshape(-1, 1), y2, jnp.zeros_like(y2))
+    if ym is not None:
+        y2 = jnp.where(ym.reshape(1, -1), y2, jnp.zeros_like(y2))
+    return x2, y2
+
+
 @register("ref", "gemm")
+@register("ref", "gemm.masked")
 def _lower_ref_gemm(op: Op):
     """Eager architected oracle: per-batch-element ref.ger, the ground
-    truth the other backends are tested against."""
+    truth the other backends are tested against.  Masked ops fold their
+    predicates into the normalized operands (= the pm_ger oracle's
+    semantics at matrix granularity)."""
     from repro.kernels import ref as _ref
     x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
-    if b is not None and (op.acc is not None or op.fused):
-        raise ValueError(
-            f"batched contraction {op.spec!r} does not take an accumulator "
-            f"input or a fused epilogue")
-    res2 = (op.residual.reshape(m, n)
-            if op.residual is not None and b is None else op.residual)
-    acc2 = (op.acc.reshape(m, n)
-            if op.acc is not None and b is None else op.acc)
+    if op.masks is not None:
+        x2, y2 = _fold_masks(x2, y2, op.masks)
+    norm = (m, n) if b is None else (b, m, n)
+    res2 = (op.residual.reshape(norm)
+            if op.residual is not None else None)
+    acc2 = op.acc.reshape(norm) if op.acc is not None else None
     passes = _passes(op.ger, x2, y2)
 
     def cast(v, want, pol):
@@ -944,23 +992,66 @@ def _pallas_conv_impl(x, w, bias, residual, *, kind, bf, strides,
     return prod.astype(out_dtype) if out_dtype is not None else prod
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "bc", "strides", "interpret", "out_dtype", "epilogue",
+    "squeeze"))
+def _pallas_depthwise_impl(x, w, bias, residual, *, kind, bc, strides,
+                           interpret, out_dtype, epilogue, squeeze):
+    """Resident-accumulator depthwise kernel (mma_conv), expansion chain
+    included — depthwise conv is bilinear too, so the F32GER_3XBF16 hi/lo
+    passes sum over one accumulator exactly like the dense conv."""
+    from repro.kernels import epilogue as _epilogue
+    from repro.kernels import mma_conv as _conv
+    pol = precision.policy(kind)
+    ep = epilogue if epilogue is not None and not epilogue.is_identity \
+        else None
+    passes = _passes(kind, x, w)
+    if len(passes) == 1:
+        xi, wi, k = passes[0]
+        pk = precision.policy(k)
+        out = _conv.mma_depthwise_conv2d(
+            xi.astype(pk.x_dtype), wi.astype(pk.y_dtype), bc=bc,
+            stride=strides,
+            out_dtype=out_dtype if out_dtype is not None else pol.acc_dtype,
+            ep=ep, bias=bias, residual=residual, interpret=interpret)
+        return out[:, 0] if squeeze else out
+    prod = None
+    for xi, wi, k in passes:
+        pk = precision.policy(k)
+        o = _conv.mma_depthwise_conv2d(
+            xi.astype(pk.x_dtype), wi.astype(pk.y_dtype), bc=bc,
+            stride=strides, out_dtype=pol.acc_dtype, interpret=interpret)
+        prod = o if prod is None else prod + o
+    prod = _epilogue.apply(prod, ep, bias=bias, residual=residual)
+    if squeeze:
+        prod = prod[:, 0]
+    return prod.astype(out_dtype) if out_dtype is not None else prod
+
+
 @register("pallas", "conv")
 def _lower_pallas_conv(op: Op):
     """Implicit-im2col kernel: the resident (OW, bf) accumulator takes one
     rank-(KW*C) update per KH step (mma_conv's fused KW panel).  Depthwise
-    and non-f32-accumulator convs never reach this lowering — ``execute``
-    reroutes them to the shardable XLA backend (same precedent as
-    gemm.saturating) before the dispatch is counted."""
-    x4, w4, strides, _, squeeze = _conv_norm(op)
+    (groups == C) runs the resident-accumulator VPU kernel — no more XLA
+    reroute.  Non-f32-accumulator convs never reach this lowering —
+    ``execute`` reroutes them to the shardable XLA backend (same precedent
+    as gemm.saturating) before the dispatch is counted."""
+    x4, w4, strides, depthwise, squeeze = _conv_norm(op)
+    res = op.residual
+    if res is not None and squeeze:
+        res = res[:, None]
+    if depthwise:
+        return _pallas_depthwise_impl(
+            x4, w4, op.bias, res, kind=op.ger,
+            bc=op.block[1] if op.block is not None else None,
+            strides=strides, interpret=op.interpret,
+            out_dtype=op.out_dtype, epilogue=op.epilogue, squeeze=squeeze)
     kh, kw, c, f = w4.shape
     ow = (x4.shape[2] - kw) // strides[1] + 1
     # Best-effort autotune-cache reuse: the panel dot is (OW, KW*C) x
     # (KW*C, bf), so consult the gemm cache at that shape; only the N-tile
     # (bf) of a winner applies to the conv grid.
     block = resolve_block(op.ger, ow, f, kw * c, op.block, op.epilogue.key)
-    res = op.residual
-    if res is not None and squeeze:
-        res = res[:, None]
     return _pallas_conv_impl(
         x4, w4, op.bias, res, kind=op.ger,
         bf=block[1] if block is not None else None, strides=strides,
@@ -1003,7 +1094,10 @@ def _lower_complex(op: Op):
     composes (re <- re@re - im@im via the np form, im <- re@im + im@re via
     pp) — the decomposition ``blas3.complex_gemm`` used to hand-code.  Runs
     on whichever backend's gemm lowering this op resolved to, so the
-    cross-backend equivalence surface extends to complex for free."""
+    cross-backend equivalence surface extends to complex for free —
+    including batched specs (the paper's batched-DFT case), now that the
+    Pallas gemm lowering threads accumulator seeds through its batch grid
+    axis."""
     fn = lookup(op.backend, "gemm", op.ger, False)
     identity_ep = type(op.epilogue)()
     xr, xi = jnp.real(op.x), jnp.imag(op.x)
@@ -1079,11 +1173,16 @@ _REGISTRY[("ref", "einsum", None, None)] = _lower_xla_einsum
 # ----------------------------------------------------------------------
 
 def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
-            bias=None, residual=None, dequant: Dequant | None = None):
+            bias=None, residual=None, dequant: Dequant | None = None,
+            masks=None):
     """Resolve ``plan`` against ``cfg``, pick a lowering, run it.
 
     This is the body of ``facility.contract`` — kept here so the facility
-    module stays the thin architected surface.
+    module stays the thin architected surface.  ``masks`` = the pm*
+    prefixed-form predicates ``(xmask, ymask, pmask)`` on the normalized
+    M/N/K axes (each entry optional) — routes to the ``gemm.masked``
+    op-class, where the Pallas lowering applies them to the streamed
+    panels in-kernel instead of pre-masking operands in HBM.
     """
     from repro.kernels import epilogue as _epilogue
 
@@ -1126,10 +1225,10 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
     elif jnp.iscomplexobj(x) or jnp.iscomplexobj(y):
         op_class = "complex"
         parsed = parse_spec(spec, jnp.ndim(x), jnp.ndim(y))
-        if parsed is None or parsed.batch:
+        if parsed is None or parsed.out_perm is not None:
             raise ValueError(
-                f"complex contraction {spec!r} must normalize to an "
-                f"unbatched GEMM")
+                f"complex contraction {spec!r} must normalize to a "
+                f"(batched) GEMM in natural output order")
         if dequant is not None or plan.saturating or not ep.is_identity:
             raise ValueError(
                 "complex contractions take accumulate forms only — no "
@@ -1140,6 +1239,35 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             parsed = None
         op_class = "gemm.saturating" if plan.saturating else (
             "gemm" if parsed is not None else "einsum")
+    if masks is not None:
+        if len(masks) != 3:
+            raise ValueError(
+                f"masks wants the 3-tuple (xmask, ymask, pmask) — entries "
+                f"may be None — got {len(masks)} entries")
+        if op_class != "gemm":
+            raise ValueError(
+                f"masks (pm* prefixed forms) require a gemm-class "
+                f"contraction, not {op_class!r} ({spec!r})")
+        if not parsed.is_natural_gemm:
+            raise ValueError(
+                f"masked contraction {spec!r} must already be in the "
+                f"normalized (batch..., M, K) x (batch..., K, N) layout "
+                f"so the (M,), (N,), (K,) predicates name unique axes")
+        if dequant is not None:
+            raise ValueError("masks and dequant are exclusive")
+        if pol.packed_int4:
+            raise ValueError(
+                "packed-int4 masked forms lower through the ref.pm_ger "
+                "oracle (ops.mma_pm_dot keeps that path)")
+        sizes = _sizes(parsed, x, y)
+        want = {0: sizes[parsed.x_free[0]], 1: sizes[parsed.y_free[0]],
+                2: sizes[parsed.contract[0]]}
+        for i, mask in enumerate(masks):
+            if mask is not None and jnp.shape(mask) != (want[i],):
+                raise ValueError(
+                    f"mask {i} has shape {jnp.shape(mask)}; want "
+                    f"({want[i]},) for spec {spec!r}")
+        op_class = "gemm.masked"
     if op_class != "conv" and (plan.stride != 1 or plan.padding != "valid"):
         raise ValueError(
             f"stride/padding apply to the conv specs only, not {spec!r}")
@@ -1159,12 +1287,13 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             "epilogue, dequant, or alpha/beta/neg accumulate forms "
             "(xvi16ger2s-class instructions have no such variants)")
 
-    if op_class == "conv" and backend == "pallas" and (
-            conv_info[1] or pol.acc_dtype != jnp.float32):
-        # Depthwise taps have no cross-channel rank to fold on the MXU and
-        # the conv kernel accumulates in f32 only: route to the shardable
-        # XLA lowering BEFORE counting, so DISPATCH_COUNTS names the
-        # backend that actually ran (gemm.saturating precedent).
+    if (op_class == "conv" and backend == "pallas"
+            and pol.acc_dtype != jnp.float32):
+        # The conv kernels accumulate in f32 only: route non-f32 families
+        # to the shardable XLA lowering BEFORE counting, so
+        # DISPATCH_COUNTS names the backend that actually ran
+        # (gemm.saturating precedent).  Depthwise no longer reroutes: it
+        # runs the resident-accumulator VPU kernel (mma_conv).
         backend = "xla"
 
     fn = lookup(backend, op_class, ger, not ep.is_identity)
@@ -1184,7 +1313,7 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             epilogue=ep, block=plan.block, interpret=interpret,
             neg_product=plan.neg_product, neg_acc=plan.neg_acc,
             alpha=plan.alpha, beta=plan.beta, backend=backend,
-            stride=stride, padding=plan.padding)
+            stride=stride, padding=plan.padding, masks=masks)
     DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
     out = fn(op)
     if dequant is not None:

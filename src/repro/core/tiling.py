@@ -57,6 +57,9 @@ class BlockConfig:
         return grid
 
     def vmem_bytes(self, pol: precision.GerPolicy) -> int:
+        # Batch-invariant: the batch grid axis takes (1, ...) blocks, so
+        # one (b, i, j) step holds exactly the same accumulator tile and
+        # panel pair as the unbatched kernel.
         acc = pol.acc_bytes * self.bm * self.bn
         panels = 2 * self.bk * (self.bm + self.bn) * pol.in_bytes
         return acc + panels
@@ -68,7 +71,12 @@ def choose_blocks(m: int, n: int, k: int, ger: precision.Ger,
 
     Heuristic mirrors the paper's kernel: a square-ish output tile as large
     as the accumulator budget allows, with a deep-enough k panel that the
-    MXU pipeline stays busy (bk >= 2*MXU when K allows).
+    MXU pipeline stays busy (bk >= 2*MXU when K allows).  Deliberately
+    batch-blind: the grid batch axis multiplies the grid volume but never
+    the VMEM footprint (batch blocks are 1-deep), so the roofline terms
+    scale linearly in b and the per-element argmin is unchanged — only the
+    autotune *measurement* (and its (b, m, n, k) cache key) can see a
+    batched launch behave differently on hardware.
     """
     pol = precision.policy(ger)
     # Clamp to the (aligned) problem size so tiny problems get tiny tiles.

@@ -22,6 +22,11 @@ Dispatched by the ``conv`` op-class of the lowering registry
 resident-row reads (output row oh reads image row ``oh*sh + kh``; the KW
 shifts step by ``sw``), so the accumulator-residency structure is
 unchanged.
+
+``mma_depthwise_conv2d`` (below) is the groups == C sibling: same
+resident-accumulator / reused-row structure, but the per-tap update is a
+VPU broadcast-multiply instead of an MXU dot (no cross-channel rank to
+fold) — mamba2's causal-conv hot path, formerly rerouted to XLA.
 """
 
 from __future__ import annotations
@@ -34,6 +39,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import epilogue as _epilogue
+
+
+def select_fuse_kw(kw: int, c: int, interpret: bool) -> bool:
+    """The fuse_kw auto gate, as pure logic (unit-testable off-TPU).
+
+    The single-panel-dot form concatenates the KW shifted row reads into
+    one (OW, KW*C) operand, which compiled Mosaic can only lift onto the
+    MXU when the concatenated minor dim is lane-aligned ((KW*C) % 128 ==
+    0); interpret mode has no lane constraint.  KW == 1 has nothing to
+    fuse.  When the gate is off, the kernel falls back to KW separate
+    rank-C dots (identical numerics, f32 accumulate in both forms).
+    """
+    return kw > 1 and (interpret or (kw * c) % 128 == 0)
 
 
 def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, sw: int,
@@ -117,7 +135,7 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
     # Single-dot form needs the concatenated panel to be MXU-liftable;
     # interpret mode (CPU) always is, compiled mode wants lane alignment.
     if fuse_kw is None:
-        fuse_kw = kw > 1 and (interpret or (kw * c) % 128 == 0)
+        fuse_kw = select_fuse_kw(kw, c, interpret)
 
     grid = (n * oh, -(-f // bf), kh)
     kernel = functools.partial(
@@ -149,5 +167,112 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
                                lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, f), out_dtype),
         scratch_shapes=[pltpu.VMEM((ow, bf), acc_dtype)],
+        interpret=interpret,
+    )(*inputs)
+
+
+# ----------------------------------------------------------------------
+# Depthwise (groups == C) convolution: resident-accumulator VPU kernel
+# ----------------------------------------------------------------------
+
+def _depthwise_kernel(*refs, kh_total: int, kw_total: int, ow: int, sw: int,
+                      acc_dtype, ep: _epilogue.Epilogue | None):
+    refs = list(refs)
+    x_ref, w_ref = refs[:2]
+    pos = 2
+    bias_ref = refs[pos] if ep and ep.bias else None
+    pos += bool(ep and ep.bias)
+    res_ref = refs[pos] if ep and ep.residual else None
+    pos += bool(ep and ep.residual)
+    out_ref, acc_ref = refs[pos:]
+    kh = pl.program_id(2)
+
+    @pl.when(kh == 0)
+    def _prime():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row = x_ref[0, 0]                       # (W, bc) image row oh*sh + kh
+    span = (ow - 1) * sw + 1
+    taps = w_ref[0]                         # (KW, bc)
+    for kw in range(kw_total):              # shifted displacements
+        xs = row[kw:kw + span:sw, :]        # (OW, bc) static strided slice
+        acc_ref[...] += xs.astype(acc_dtype) * taps[kw][None, :].astype(
+            acc_dtype)
+
+    @pl.when(kh == kh_total - 1)
+    def _store():
+        out = acc_ref[...]
+        if ep is not None:
+            out = _epilogue.apply(
+                out, ep,
+                bias=bias_ref[...] if bias_ref is not None else None,
+                residual=res_ref[0, 0] if res_ref is not None else None)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def mma_depthwise_conv2d(image: jnp.ndarray, taps: jnp.ndarray, *,
+                         bc: int | None = None,
+                         stride: tuple[int, int] = (1, 1),
+                         out_dtype=jnp.float32,
+                         ep: _epilogue.Epilogue | None = None,
+                         bias: jnp.ndarray | None = None,
+                         residual: jnp.ndarray | None = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """VALID depthwise (groups == C) convolution, stride (sh, sw).
+
+    image: (N, H, W, C); taps: (KH, KW, C) -> (N, OH, OW, C).  Channel c
+    of the output sees only channel c of the input, so there is no
+    cross-channel rank to fold on the MXU — but the *accumulator
+    residency* story is identical to SCONV: the (OW, bc) output tile
+    lives in VMEM scratch across the KH grid axis, each image row is
+    loaded once and reused at KW shifted displacements, and the result is
+    stored exactly once with the epilogue fused into the deprime.  The
+    per-tap update is a VPU broadcast-multiply-accumulate instead of an
+    MXU dot (this is mamba2's causal-conv hot path).
+    """
+    n, h, w, c = image.shape
+    kh, kw, c2 = taps.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch {image.shape} vs {taps.shape}")
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
+    bc = bc or min(c, 128)
+    acc_dtype = jnp.float32
+    ep = ep if ep is not None and not ep.is_identity else None
+    if ep is not None:
+        ep.validate(acc_dtype, bias=bias, residual=residual)
+    elif bias is not None or residual is not None:
+        raise ValueError("bias/residual operands need an Epilogue")
+
+    grid = (n * oh, -(-c // bc), kh)
+    kernel = functools.partial(
+        _depthwise_kernel, kh_total=kh, kw_total=kw, ow=ow, sw=sw,
+        acc_dtype=acc_dtype, ep=ep)
+
+    in_specs = [
+        # One channel-block of image row oh*sh + kh, resident per (row, kh).
+        pl.BlockSpec((1, 1, w, bc),
+                     lambda i, j, k, oh=oh, sh=sh: (i // oh,
+                                                    (i % oh) * sh + k, 0, j)),
+        # One kh-slice of the taps: (1, KW, bc).
+        pl.BlockSpec((1, kw, bc), lambda i, j, k: (k, 0, j)),
+    ]
+    inputs = [image, taps]
+    if ep is not None and ep.bias:
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, j, k: (0, j)))
+        inputs.append(bias.reshape(1, c))
+    if ep is not None and ep.residual:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, ow, bc), lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)))
+        inputs.append(residual)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, ow, bc),
+                               lambda i, j, k, oh=oh: (i // oh, i % oh, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), out_dtype),
+        scratch_shapes=[pltpu.VMEM((ow, bc), acc_dtype)],
         interpret=interpret,
     )(*inputs)

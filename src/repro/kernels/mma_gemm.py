@@ -10,9 +10,16 @@ Maps the paper's POWER10 Matrix Math Engine execution model onto Pallas:
   * Each grid step along k streams one (bm, bk) X-panel and one (bk, bn)
     Y-panel through VMEM and issues MXU rank-bk updates — the analogue of
     the xv*ger* instructions streaming 128-bit VSR pairs.
-  * The pm* prefixed masked forms (paper section II-C) become iota masks on
-    the fringe blocks, so arbitrary M/N/K never require padded operands in
-    HBM and disabled lanes contribute exact zeros.
+  * The pm* prefixed masked forms (paper section II-C) appear twice: iota
+    masks on the fringe blocks (arbitrary M/N/K never require padded
+    operands in HBM), and — via ``masks`` — architected row/column/rank
+    predicates streamed into VMEM and applied to the panels *inside* the
+    kernel, so disabled lanes contribute exact zeros without the operands
+    ever being pre-masked in HBM (the ``gemm.masked`` op-class).
+  * Batched contractions fold the batch axis into the grid — grid
+    ``(b, i, j, k)`` with batch-indexed BlockSpecs — so one ``pallas_call``
+    covers every batch element with its own resident accumulator tile,
+    instead of a vmapped trace per element.
 
 Supported ger kinds (see repro.core.precision): f64 (interpret/VPU), f32,
 bf16, f16, int16 (adapted), int8 x uint8, packed int4.  The beyond-paper
@@ -45,13 +52,22 @@ def _unpack_int4(v: jnp.ndarray, axis: int) -> jnp.ndarray:
 
 
 def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
-                 has_c, alpha, beta, ep: _epilogue.Epilogue | None = None):
+                 has_c, alpha, beta, ep: _epilogue.Epilogue | None = None,
+                 batched: bool = False,
+                 has_masks=(False, False, False)):
     ep = ep if ep is not None and not ep.is_identity else None
+    has_xm, has_ym, has_pm = has_masks
 
     def kernel(*refs):
         refs = list(refs)
         x_ref, y_ref = refs[:2]
         pos = 2
+        xm_ref = refs[pos] if has_xm else None
+        pos += has_xm
+        ym_ref = refs[pos] if has_ym else None
+        pos += has_ym
+        pm_ref = refs[pos] if has_pm else None
+        pos += has_pm
         c_ref = refs[pos] if has_c else None
         pos += has_c
         bias_ref = refs[pos] if ep and ep.bias else None
@@ -59,13 +75,14 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
         res_ref = refs[pos] if ep and ep.residual else None
         pos += bool(ep and ep.residual)
         out_ref, acc_ref = refs[pos:]
-        ki = pl.program_id(2)
+        ki = pl.program_id(3 if batched else 2)
 
         # ---- prime the accumulator (xxsetaccz / accumulate forms) ----
         @pl.when(ki == 0)
         def _prime():
             if has_c:
-                init = c_ref[...].astype(pol.acc_dtype)
+                c = c_ref[0] if batched else c_ref[...]
+                init = c.astype(pol.acc_dtype)
                 if beta != 1.0:
                     init = init * jnp.asarray(beta, pol.acc_dtype)
                 acc_ref[...] = -init if neg_acc else init
@@ -73,11 +90,23 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                 acc_ref[...] = jnp.zeros_like(acc_ref)
 
         # ---- one rank-bk update:  acc += [-] X_panel @ Y_panel ----
-        x = x_ref[...]
-        y = y_ref[...]
+        x = x_ref[0] if batched else x_ref[...]
+        y = y_ref[0] if batched else y_ref[...]
         if pol.packed_int4:
             x = _unpack_int4(x, axis=1)
             y = _unpack_int4(y, axis=0)
+        # pm* architected predicates (paper eq. 3), applied to the streamed
+        # panels in VMEM: disabled rows/columns/ranks contribute exact
+        # zeros; the operands in HBM are never pre-masked.  The rank
+        # predicate zeroes BOTH panels so a disabled partial product can
+        # never pair a zero with a non-finite operand lane.
+        if xm_ref is not None:
+            x = jnp.where(xm_ref[...], x, jnp.zeros_like(x))
+        if pm_ref is not None:
+            x = jnp.where(pm_ref[...], x, jnp.zeros_like(x))
+            y = jnp.where(pm_ref[...].reshape(-1, 1), y, jnp.zeros_like(y))
+        if ym_ref is not None:
+            y = jnp.where(ym_ref[...], y, jnp.zeros_like(y))
         # pm*-style fringe mask along k: zero partial products past K.  Both
         # panels are masked — out-of-bounds reads are undefined (NaN in
         # interpret mode) and 0 * NaN would poison the accumulator.
@@ -102,11 +131,18 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
             if alpha != 1.0:
                 out = out * jnp.asarray(alpha, pol.acc_dtype)
             if ep is not None:
+                res = None
+                if res_ref is not None:
+                    res = res_ref[0] if batched else res_ref[...]
                 out = _epilogue.apply(
                     out, ep,
                     bias=bias_ref[...] if bias_ref is not None else None,
-                    residual=res_ref[...] if res_ref is not None else None)
-            out_ref[...] = out.astype(out_ref.dtype)
+                    residual=res)
+            out = out.astype(out_ref.dtype)
+            if batched:
+                out_ref[0] = out
+            else:
+                out_ref[...] = out
 
     return kernel
 
@@ -120,15 +156,26 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
              ep: _epilogue.Epilogue | None = None,
              bias: jnp.ndarray | None = None,
              residual: jnp.ndarray | None = None,
+             masks: tuple | None = None,
              out_dtype=None, interpret: bool = False) -> jnp.ndarray:
     """C <- alpha * [-](X @ Y)  [+ beta * (+/-)C]  with resident accumulator.
 
-    x: (M, K); y: (K, N); c: optional (M, N) accumulator input (the
-    pp/np/pn/nn accumulate forms).  int4 kind: K axis packed 2-per-byte.
+    x: (M, K) or batched (B, M, K); y: (K, N) / (B, K, N); c: optional
+    (M, N) / (B, M, N) accumulator input (the pp/np/pn/nn accumulate
+    forms).  int4 kind: K axis packed 2-per-byte.
 
-    ``ep`` fuses bias (N,), activation, and residual (M, N) into the final
-    k-step store (epilogue.py contract): the accumulator tile leaves VMEM
-    exactly once, already post-processed.
+    Batched operands run as ONE ``pallas_call`` with grid ``(B, gm, gn,
+    gk)`` — the batch axis is a grid dimension with batch-indexed
+    BlockSpecs, not a vmapped re-trace — and every (b, i, j) output tile
+    keeps its own resident VMEM accumulator across the k-loop.
+
+    ``ep`` fuses bias (N,), activation, and residual ((B,) M, N) into the
+    final k-step store (epilogue.py contract): the accumulator tile leaves
+    VMEM exactly once, already post-processed.
+
+    ``masks`` carries the pm* prefixed-form predicates ``(xmask, ymask,
+    pmask)`` — shapes (M,), (N,), (K,), bool, each optional — applied to
+    the streamed panels inside the kernel (paper section II-C).
     """
     pol = precision.policy(kind)
     if kind == precision.Ger.F32GER_3XBF16:
@@ -136,10 +183,18 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
             "F32GER_3XBF16 is a registered expansion hook — lower it "
             "through facility.contract (core/lowering.py), which chains "
             "three BF16GER2 kernel passes over one resident accumulator")
-    m, k_packed = x.shape
-    k2, n = y.shape
-    if k_packed != k2:
-        raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    batched = x.ndim == 3
+    if batched:
+        b, m, k_packed = x.shape
+        b2, k2, n = y.shape
+        if b != b2 or k_packed != k2:
+            raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    else:
+        b = None
+        m, k_packed = x.shape
+        k2, n = y.shape
+        if k_packed != k2:
+            raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
     pack = 2 if pol.packed_int4 else 1
     k = k_packed * pack
     out_dtype = out_dtype or pol.acc_dtype
@@ -148,6 +203,12 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
         ep.validate(pol.acc_dtype, bias=bias, residual=residual)
     elif bias is not None or residual is not None:
         raise ValueError("bias/residual operands need an Epilogue")
+    xm, ym, pm = masks if masks is not None else (None, None, None)
+    if (xm is not None or pm is not None) and pol.packed_int4:
+        raise ValueError(
+            "packed-int4 masked forms lower through the ref.pm_ger oracle "
+            "(nibble unpacking and rank predicates do not compose in the "
+            "streamed kernel)")
 
     cfg = (tiling.choose_blocks(m, n, k, kind) if block is None
            else tiling.BlockConfig(*block))
@@ -155,35 +216,65 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
     bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     bk_packed = max(bk // pack, 1)
     bk_logical = bk_packed * pack
-    grid = (-(-m // bm), -(-n // bn), -(-k_packed // bk_packed))
+    grid2d = (-(-m // bm), -(-n // bn), -(-k_packed // bk_packed))
+    grid = (b,) + grid2d if batched else grid2d
+
+    # Index maps: the batch coordinate (when present) selects the batch
+    # element of x/y/c/residual/out blocks and is ignored by the shared
+    # bias/mask vectors.
+    def imap(fn, with_b: bool = False):
+        if not batched:
+            return fn
+        if with_b:
+            return lambda bb, i, j, kk: (bb,) + fn(i, j, kk)
+        return lambda bb, i, j, kk: fn(i, j, kk)
+
+    def bspec(shape2, fn, with_b: bool = False):
+        if batched and with_b:
+            return pl.BlockSpec((1,) + shape2, imap(fn, True))
+        return pl.BlockSpec(shape2, imap(fn))
 
     in_specs = [
-        pl.BlockSpec((bm, bk_packed), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((bk_packed, bn), lambda i, j, kk: (kk, j)),
+        bspec((bm, bk_packed), lambda i, j, kk: (i, kk), with_b=True),
+        bspec((bk_packed, bn), lambda i, j, kk: (kk, j), with_b=True),
     ]
     inputs = [x, y]
+    if xm is not None:
+        # Row predicate as a (bm, 1) block of an (M, 1) bool operand.
+        in_specs.append(bspec((bm, 1), lambda i, j, kk: (i, 0)))
+        inputs.append(xm.reshape(m, 1))
+    if ym is not None:
+        in_specs.append(bspec((1, bn), lambda i, j, kk: (0, j)))
+        inputs.append(ym.reshape(1, n))
+    if pm is not None:
+        in_specs.append(bspec((1, bk_logical), lambda i, j, kk: (0, kk)))
+        inputs.append(pm.reshape(1, k))
     if c is not None:
-        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        in_specs.append(bspec((bm, bn), lambda i, j, kk: (i, j),
+                              with_b=True))
         inputs.append(c)
     if ep is not None and ep.bias:
         # Row-broadcast vector as a (1, bn) block of a (1, N) operand.
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        in_specs.append(bspec((1, bn), lambda i, j, kk: (0, j)))
         inputs.append(bias.reshape(1, n))
     if ep is not None and ep.residual:
-        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        in_specs.append(bspec((bm, bn), lambda i, j, kk: (i, j),
+                              with_b=True))
         inputs.append(residual)
 
     kernel = _make_kernel(
-        pol=pol, k_steps=grid[2], k_size=k, bk_logical=bk_logical,
+        pol=pol, k_steps=grid2d[2], k_size=k, bk_logical=bk_logical,
         neg_product=neg_product, neg_acc=neg_acc, has_c=c is not None,
-        alpha=alpha, beta=beta, ep=ep)
+        alpha=alpha, beta=beta, ep=ep, batched=batched,
+        has_masks=(xm is not None, ym is not None, pm is not None))
 
+    out_shape = (b, m, n) if batched else (m, n)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_specs=bspec((bm, bn), lambda i, j, kk: (i, j), with_b=True),
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), pol.acc_dtype)],
         interpret=interpret,
     )(*inputs)

@@ -6,10 +6,12 @@ moved into the lowering registry (``repro.core.lowering``): ``mma_dot`` /
 ``mma_dot_fused`` / ``mma_conv2d`` survive as deprecated shims so existing
 callers and the tier-1 suite keep working, while in-repo code calls
 ``facility.contract`` directly (convolution is the registry's ``conv``
-op-class since the facility.CONV* specs landed).  ``mma_pm_dot`` (prefixed
-masked forms) and ``mma_ger_saturating`` (clamped accumulate forms) remain
-the supported kernel-level builtins for operations ``contract`` specs do
-not name.
+op-class since the facility.CONV* specs landed, and the prefixed masked
+forms are its ``gemm.masked`` op-class via ``contract(..., masks=...)``
+since the grid-native-batch PR).  ``mma_ger_saturating`` (clamped
+accumulate forms) remains the supported kernel-level builtin for the one
+operation ``contract`` specs do not name; ``mma_pm_dot`` is now a
+deprecated shim too (except packed int4, which keeps the ref oracle).
 """
 
 from __future__ import annotations
@@ -119,23 +121,25 @@ def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,
 
 def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
                use_pallas: bool = True, interpret: bool = True):
-    """Prefixed masked rank-k update (paper eq. 3), matrix granularity.
+    """Deprecated: ``facility.contract("mk,kn->mn", x, y, masks=(xmask,
+    ymask, pmask), plan=Plan(ger=kind, ...))``.
 
-    The Pallas path applies the masks to the operands before the kernel —
-    on TPU the masks are fused into the VMEM loads; disabled lanes
-    contribute exact zeros and can never raise exceptions, matching the
-    architected pm* behaviour.
+    Prefixed masked rank-k update (paper eq. 3), matrix granularity,
+    lowered by the registry's ``gemm.masked`` op-class: the predicates
+    stream into the Pallas kernel and disable lanes on the VMEM-resident
+    panels — the operands are never pre-masked in HBM (this shim used to
+    materialize ``x * mask`` before dispatch).  Packed int4 stays on the
+    ``ref.pm_ger`` oracle (nibble unpacking and rank predicates do not
+    compose in the streamed kernel).
     """
     pol = precision.policy(kind)
     if pol.packed_int4:
         return _ref.pm_ger(x, y, kind, xmask, ymask, pmask, acc)
-    xm = xmask.astype(x.dtype)[:, None]
-    if pmask is not None:
-        xm = xm * pmask.astype(x.dtype)[None, :]
-    xz = (x * xm).astype(x.dtype)
-    yz = (y * ymask.astype(y.dtype)[None, :]).astype(y.dtype)
+    lowering.deprecated_shim(
+        "ops.mma_pm_dot", 'contract("mk,kn->mn", x, y, '
+        "masks=(xmask, ymask, pmask), acc=acc, plan=Plan(ger=kind, ...))")
     return facility.contract(
-        _GEMM, xz, yz, acc=acc,
+        _GEMM, x, y, acc=acc, masks=(xmask, ymask, pmask),
         plan=_plan(kind, None, use_pallas, interpret, None))
 
 

@@ -131,17 +131,19 @@ def apply_moe(p, x, cfg):
     xe = shard(xe.reshape(e, cap, d), "experts", None, None)
 
     # ---- expert GEMMs (facility: batched rank-k updates) ----
-    # Same activation definitions as the fused dense-MLP epilogue
-    # (epilogue.ACTIVATIONS uses exact erf gelu), so one network never
-    # mixes two gelu formulations between expert and dense paths.
-    act = _epilogue.ACTIVATIONS[cfg.act]
-    h1 = facility.contract("ecd,edf->ecf", xe, p["w1"])
+    # One grid-native batched kernel per contraction (the expert axis is a
+    # grid dimension), with the activation fused into w1's deprime store —
+    # computed on the fp32 resident accumulator, exactly like the dense
+    # MLP epilogue (same epilogue.ACTIVATIONS definitions, so one network
+    # never mixes two gelu formulations between expert and dense paths).
+    h1 = facility.contract(
+        "ecd,edf->ecf", xe, p["w1"],
+        plan=Plan(epilogue=_epilogue.Epilogue(activation=cfg.act)))
     h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
     if cfg.gated_mlp:
-        h3 = facility.contract("ecd,edf->ecf", xe, p["w3"])
-        h = act(h1) * h3
+        h = h1 * facility.contract("ecd,edf->ecf", xe, p["w3"])
     else:
-        h = act(h1)
+        h = h1
     ye = facility.contract("ecf,efd->ecd", h, p["w2"])
     ye = shard(ye, "experts", None, None).reshape(e * cap, d)
 

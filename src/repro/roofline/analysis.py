@@ -148,41 +148,57 @@ class RooflineTerms:
 # Kernel-level GEMM roofline: the autotuner's ranking prior
 # ----------------------------------------------------------------------
 
-def gemm_traffic_bytes(m: int, n: int, k: int, cfg, pol) -> int:
+# Modeled per-kernel-launch dispatch overhead (s): trace/dispatch plus the
+# pipeline drain a fresh pallas_call pays before its first tile streams.
+# Used only when a caller asks for it (launches > 0) — e.g. the batched
+# dgemm benchmark's vmapped-(b launches)-vs-grid-native-(1 launch) columns;
+# the autotune prior ranks candidates of ONE launch, where a constant
+# offset cannot change the argmin.
+LAUNCH_OVERHEAD_S = 4e-6
+
+
+def gemm_traffic_bytes(m: int, n: int, k: int, cfg, pol, b: int = 1) -> int:
     """HBM traffic of the accumulator-resident kernel for one BlockConfig.
 
     Each X panel is read once per N-tile column, each Y panel once per
     M-tile row (Pallas revisits both for every (i, j) output tile); C is
-    written exactly once — the accumulator-residency payoff.
+    written exactly once — the accumulator-residency payoff.  A batched
+    contraction repeats the per-element traffic for each of the ``b`` grid
+    batch steps.
     """
     gm, gn, gk = cfg.grid_of(m, n, k)
-    x_reads = gm * gn * gk * cfg.bm * cfg.bk * pol.in_bytes
-    y_reads = gm * gn * gk * cfg.bk * cfg.bn * pol.in_bytes
-    c_write = m * n * pol.acc_bytes
+    x_reads = b * gm * gn * gk * cfg.bm * cfg.bk * pol.in_bytes
+    y_reads = b * gm * gn * gk * cfg.bk * cfg.bn * pol.in_bytes
+    c_write = b * m * n * pol.acc_bytes
     return x_reads + y_reads + c_write
 
 
 def gemm_projected_time(m: int, n: int, k: int, cfg, pol,
-                        hw: dict = V5E) -> float:
+                        hw: dict = V5E, b: int = 1,
+                        launches: int = 0) -> float:
     """Roofline time (s) for the blocked GEMM on the modeled chip.
 
     Compute term charges the *padded* grid volume (fringe tiles do full
     MXU work on masked lanes), so configs that overshoot the problem pay
-    for it; memory term uses the block-level traffic model.
+    for it; memory term uses the block-level traffic model.  ``b`` scales
+    both terms for a batched (grid ``(b, i, j, k)``) launch; ``launches``
+    > 0 additionally charges the modeled dispatch overhead per kernel
+    launch (b launches for a vmapped trace, 1 for grid-native batch).
     """
     gm, gn, gk = cfg.grid_of(m, n, k)
-    padded_flops = 2.0 * (gm * cfg.bm) * (gn * cfg.bn) * (gk * cfg.bk)
+    padded_flops = 2.0 * b * (gm * cfg.bm) * (gn * cfg.bn) * (gk * cfg.bk)
     t_compute = padded_flops / hw["peak_flops"]
-    t_memory = gemm_traffic_bytes(m, n, k, cfg, pol) / hw["hbm_bw"]
-    return max(t_compute, t_memory)
+    t_memory = gemm_traffic_bytes(m, n, k, cfg, pol, b) / hw["hbm_bw"]
+    return max(t_compute, t_memory) + launches * LAUNCH_OVERHEAD_S
 
 
 def gemm_projected_util(m: int, n: int, k: int, cfg, pol,
-                        hw: dict = V5E) -> float:
+                        hw: dict = V5E, b: int = 1,
+                        launches: int = 0) -> float:
     """Useful-FLOPs fraction of peak under the projected time: the score
     plotted against the paper's Figure 11 (% of peak vs problem size)."""
-    ideal = 2.0 * m * n * k / hw["peak_flops"]
-    t = gemm_projected_time(m, n, k, cfg, pol, hw)
+    ideal = 2.0 * b * m * n * k / hw["peak_flops"]
+    t = gemm_projected_time(m, n, k, cfg, pol, hw, b, launches)
     return ideal / t if t else 0.0
 
 

@@ -239,3 +239,145 @@ def test_choose_blocks_fits_and_aligned():
             cfg = tiling.choose_blocks(m, n, k, kind)
             tiling.assert_fits_vmem(cfg, kind)
             assert cfg.bn % 128 == 0 and cfg.bk % 128 == 0
+
+
+# ----------------------------------------------------------------------
+# Grid-native batch (kernel level)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", [Ger.BF16GER2, Ger.F32GER, Ger.I8GER4],
+                         ids=lambda k: k.value)
+def test_gemm_batched_matches_per_element(kind, rng):
+    """A 3-D operand pair runs the batch axis as a grid dimension and is
+    bit-for-bit the per-element 2-D kernel at the same block config —
+    fringe shapes included."""
+    b, m, k, n = 3, 33, 57, 130
+    x = jnp.stack([_rand_for(kind, (m, k), rng) for _ in range(b)])
+    pol = policy(kind)
+    ydt = jnp.dtype(pol.y_dtype)
+    if ydt == jnp.uint8:
+        y = jnp.asarray(rng.integers(0, 256, (b, k, n)), jnp.uint8)
+    elif ydt == jnp.int16:
+        y = jnp.asarray(rng.integers(-1000, 1000, (b, k, n)), jnp.int16)
+    else:
+        y = jnp.asarray(rng.normal(size=(b, k, n)), ydt)
+    blk = (32, 128, 128)
+    got = K.mma_gemm(x, y, kind=kind, block=blk, interpret=True)
+    base = jnp.stack([K.mma_gemm(x[i], y[i], kind=kind, block=blk,
+                                 interpret=True) for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_gemm_batched_acc_and_epilogue(rng):
+    """The batched kernel threads accumulator seeds, accumulate forms,
+    and the fused epilogue through the batch grid axis."""
+    from repro.kernels.epilogue import Epilogue
+    b, m, k, n = 2, 16, 32, 24
+    x = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, k, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, m, n)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(b, m, n)), jnp.float32)
+    blk = (16, 128, 128)
+    got = K.mma_gemm(x, y, c, kind=Ger.F32GER, block=blk, alpha=0.5,
+                     beta=2.0, interpret=True)
+    want = 0.5 * (np.einsum("bmk,bkn->bmn", x, y) + 2.0 * np.asarray(c))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+    ep = Epilogue(bias=True, activation="relu", residual=True)
+    got = K.mma_gemm(x, y, kind=Ger.F32GER, block=blk, ep=ep, bias=bias,
+                     residual=res, interpret=True)
+    want = np.maximum(np.einsum("bmk,bkn->bmn", x, y)
+                      + np.asarray(bias), 0.0) + np.asarray(res)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_masks_streamed_into_kernel(rng):
+    """Kernel-level pm* predicates: masks ride as VMEM operands and match
+    the pm_ger oracle; a poisoned disabled row yields exact zeros."""
+    m, k, n = 48, 64, 96
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    xm = jnp.asarray(rng.random(m) > 0.3)
+    ym = jnp.asarray(rng.random(n) > 0.3)
+    pm = jnp.asarray(rng.random(k) > 0.3)
+    got = K.mma_gemm(x, y, kind=Ger.F32GER, block=(32, 128, 128),
+                     masks=(xm, ym, pm), interpret=True)
+    want = ref.pm_ger(x, y, Ger.F32GER, xm, ym, pm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    xbad = x.at[5].set(jnp.nan)
+    got = K.mma_gemm(xbad, y, kind=Ger.F32GER, block=(32, 128, 128),
+                     masks=(jnp.ones(m, bool).at[5].set(False), None, None),
+                     interpret=True)
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_array_equal(np.asarray(got[5]), np.zeros(n))
+
+
+# ----------------------------------------------------------------------
+# fuse_kw gating ((KW*C) % 128), as pure logic
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,c,interpret,want", [
+    (3, 4, True, True),      # interpret mode: no lane constraint
+    (3, 4, False, False),    # compiled: 12 lanes -> fall back to KW dots
+    (2, 64, False, True),    # compiled: 128 lanes -> MXU-liftable
+    (3, 128, False, True),   # compiled: 384 lanes -> aligned
+    (3, 129, False, False),  # compiled: 387 lanes -> misaligned
+    (1, 128, True, False),   # KW == 1: nothing to fuse, either mode
+    (1, 128, False, False),
+])
+def test_select_fuse_kw_gate(kw, c, interpret, want):
+    """The auto gate as pure logic: fused exactly when there is a KW span
+    to hoist AND the concatenated panel is lane-aligned (or interpret
+    mode, which has no lane constraint)."""
+    assert KC.select_fuse_kw(kw, c, interpret) is want
+
+
+def test_fuse_kw_auto_selection_feeds_compiled_fallback(monkeypatch, rng):
+    """fuse_kw=None consults select_fuse_kw with the kernel's actual
+    (kw, c, interpret) triple — the compiled-mode fallback is chosen by
+    the gate, not hardcoded to interpret behaviour."""
+    seen = {}
+    real = KC.select_fuse_kw
+
+    def spy(kw, c, interpret):
+        seen["args"] = (kw, c, interpret)
+        return real(kw, c, interpret)
+
+    monkeypatch.setattr(KC, "select_fuse_kw", spy)
+    img = jnp.asarray(rng.normal(size=(1, 5, 6, 4)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    out = KC.mma_conv2d(img, ker, interpret=True)
+    assert seen["args"] == (3, 4, True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.conv2d(img, ker)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Depthwise resident-accumulator kernel
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [(1, 1), (1, 2), (2, 1)])
+def test_depthwise_kernel_matches_oracle(stride, rng):
+    img = jnp.asarray(rng.normal(size=(2, 9, 11, 6)), jnp.float32)
+    taps = jnp.asarray(rng.normal(size=(3, 4, 6)), jnp.float32)
+    got = KC.mma_depthwise_conv2d(img, taps, stride=stride, interpret=True)
+    want = ref.depthwise_conv(img, taps, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_kernel_fused_epilogue_and_channel_fringe(rng):
+    """bias+silu fuse into the deprime store; a channel count off the
+    block lattice exercises the channel-fringe path."""
+    from repro.kernels.epilogue import Epilogue, apply as ep_apply
+    img = jnp.asarray(rng.normal(size=(1, 7, 8, 5)), jnp.float32)
+    taps = jnp.asarray(rng.normal(size=(2, 3, 5)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+    ep = Epilogue(bias=True, activation="silu")
+    got = KC.mma_depthwise_conv2d(img, taps, bc=4, ep=ep, bias=bias,
+                                  interpret=True)
+    want = ep_apply(ref.depthwise_conv(img, taps), ep, bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

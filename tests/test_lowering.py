@@ -589,18 +589,90 @@ def test_conv_3xbf16_expansion_applies(rng):
                                    rtol=1e-5, atol=1e-5, err_msg=backend)
 
 
-def test_depthwise_pallas_plan_counts_as_xla(rng):
-    """Regression: the pallas->xla conv reroute (depthwise has no MXU
-    rank to fold) happens before dispatch counting, so observability
-    names the backend that actually ran."""
+def test_depthwise_f32_runs_the_pallas_kernel(rng):
+    """Depthwise (groups == C) no longer reroutes to XLA for f32
+    accumulators: the resident-accumulator VPU kernel runs and matches
+    the shift-and-sum oracle."""
+    x = jnp.asarray(rng.normal(size=(2, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    got = facility.contract(
+        facility.CONV1D_DEPTHWISE, x, w,
+        plan=Plan(ger=Ger.F32GER, backend="pallas", padding="causal",
+                  out_dtype=jnp.float32))
+    assert lowering.DISPATCH_COUNTS[
+        ("pallas", "conv", Ger.F32GER.value)] == 1
+    assert not any(k[0] == "xla" for k in lowering.DISPATCH_COUNTS)
+    want = facility.contract(
+        facility.CONV1D_DEPTHWISE, x, w,
+        plan=Plan(ger=Ger.F32GER, backend="ref", padding="causal",
+                  out_dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_non_f32_acc_still_reroutes_to_xla(rng):
+    """The conv kernels accumulate in f32 only: non-f32 families keep the
+    pre-dispatch-count XLA reroute."""
     x = jnp.asarray(rng.normal(size=(1, 8, 4)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
     lowering.DISPATCH_COUNTS.clear()
-    facility.contract(facility.CONV1D_DEPTHWISE, x, w,
-                      plan=Plan(ger=Ger.F32GER, backend="pallas",
-                                padding="causal", out_dtype=jnp.float32))
-    assert lowering.DISPATCH_COUNTS[("xla", "conv", Ger.F32GER.value)] == 1
+    with jax.experimental.enable_x64():
+        facility.contract(
+            facility.CONV1D_DEPTHWISE, x.astype(jnp.float64),
+            w.astype(jnp.float64),
+            plan=Plan(ger=Ger.F64GER, backend="pallas", padding="causal",
+                      out_dtype=jnp.float64))
+    assert lowering.DISPATCH_COUNTS[("xla", "conv", Ger.F64GER.value)] == 1
     assert not any(k[0] == "pallas" for k in lowering.DISPATCH_COUNTS)
+
+
+def test_depthwise_pallas_fused_epilogue_and_stride_backends_agree(rng):
+    """The depthwise kernel threads the fused bias+silu deprime (mamba2's
+    causal-conv epilogue) and strided reads, agreeing with xla/ref."""
+    x = jnp.asarray(rng.normal(size=(2, 11, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    for stride in (1, 2):
+        outs = {}
+        for backend in ("pallas", "xla", "ref"):
+            outs[backend] = facility.contract(
+                facility.CONV1D_DEPTHWISE, x, w, bias=b,
+                plan=Plan(ger=Ger.F32GER, backend=backend, stride=stride,
+                          padding="same",
+                          epilogue=E.Epilogue(bias=True, activation="silu"),
+                          out_dtype=jnp.float32))
+        for bk in ("xla", "ref"):
+            np.testing.assert_allclose(
+                np.asarray(outs["pallas"]), np.asarray(outs[bk]),
+                rtol=1e-5, atol=1e-5, err_msg=f"stride={stride} vs {bk}")
+
+
+def test_batched_conv_matches_per_image_baseline_bitwise(rng):
+    """The conv kernels' batch axis (grid row axis) is bit-for-bit the
+    per-image loop at fp32 — dense and depthwise."""
+    x = jnp.asarray(rng.normal(size=(3, 7, 9, 4)), jnp.float32)
+    ker = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    taps = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+    x1d = jnp.asarray(rng.normal(size=(3, 9, 4)), jnp.float32)
+    plan2d = Plan(ger=Ger.F32GER, backend="pallas", out_dtype=jnp.float32)
+    got = facility.contract(facility.CONV2D, x, ker, plan=plan2d)
+    base = jnp.concatenate([
+        facility.contract(facility.CONV2D, x[i:i + 1], ker, plan=plan2d)
+        for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    pland = Plan(ger=Ger.F32GER, backend="pallas", padding="causal",
+                 out_dtype=jnp.float32)
+    got = facility.contract(facility.CONV1D_DEPTHWISE, x1d, taps, plan=pland)
+    base = jnp.concatenate([
+        facility.contract(facility.CONV1D_DEPTHWISE, x1d[i:i + 1], taps,
+                          plan=pland)
+        for i in range(3)])
+    # The depthwise update is an elementwise VPU multiply-add, which XLA
+    # CPU FMA-contracts differently with the grid trip count — one-ulp
+    # drift, unlike the MXU dot updates above (those stay bit-for-bit).
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=0, atol=1e-6)
 
 
 def test_causal_padding_is_1d_only(rng):
@@ -719,7 +791,7 @@ def test_complex_np_accumulate_form_backends_agree(rng):
                                    rtol=1e-4, atol=1e-4, err_msg=backend)
 
 
-def test_complex_rejects_epilogue_and_batch(rng):
+def test_complex_rejects_epilogue_and_permuted_output(rng):
     a = jnp.zeros((4, 8), jnp.complex64)
     b = jnp.zeros((8, 4), jnp.complex64)
     bias = jnp.zeros((4,), jnp.float32)
@@ -727,10 +799,61 @@ def test_complex_rejects_epilogue_and_batch(rng):
         facility.contract("mk,kn->mn", a, b, bias=bias,
                           plan=Plan(ger=Ger.F32GER,
                                     epilogue=E.Epilogue(bias=True)))
-    with pytest.raises(ValueError, match="unbatched"):
-        facility.contract("bmk,bkn->bmn", jnp.zeros((2, 4, 8), jnp.complex64),
-                          jnp.zeros((2, 8, 4), jnp.complex64),
-                          plan=Plan(ger=Ger.F32GER))
+    # transposed output: the four-ger chain seeds accumulators in natural
+    # order, so permuted specs are rejected rather than silently mis-seeded
+    with pytest.raises(ValueError, match="natural output order"):
+        facility.contract("mk,kn->nm", a, b, plan=Plan(ger=Ger.F32GER))
+
+
+def test_complex_batched_backends_agree_and_match_vmapped_baseline(rng):
+    """Batched complex contractions (the paper's batched-DFT case) lower
+    through the grid-native batched gemm path on every backend; on pallas
+    the result is bit-for-bit the per-element (vmapped-era) baseline at
+    fp32 when the block config is pinned."""
+    b = 3
+    a = jnp.asarray(rng.normal(size=(b, 8, 12))
+                    + 1j * rng.normal(size=(b, 8, 12)), jnp.complex64)
+    c = jnp.asarray(rng.normal(size=(b, 12, 6))
+                    + 1j * rng.normal(size=(b, 12, 6)), jnp.complex64)
+    want = np.einsum("bmk,bkn->bmn", np.asarray(a), np.asarray(c))
+    blk = (8, 128, 128)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "bmk,bkn->bmn", a, c,
+            plan=Plan(ger=Ger.F32GER, backend=backend, block=blk,
+                      out_dtype=lowering.ACC))
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+    got = facility.contract(
+        "bmk,bkn->bmn", a, c,
+        plan=Plan(ger=Ger.F32GER, backend="pallas", block=blk,
+                  out_dtype=lowering.ACC))
+    base = jnp.stack([facility.contract(
+        "mk,kn->mn", a[i], c[i],
+        plan=Plan(ger=Ger.F32GER, backend="pallas", block=blk,
+                  out_dtype=lowering.ACC)) for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_batched_dft_matches_per_signal_plan(rng):
+    """blas3.dft on a (B, N, M) stack is one plan (single kernel launch
+    per accumulate-form ger, shared twiddles) and matches the per-signal
+    2-D plan and numpy's FFT."""
+    from repro.kernels import blas3
+    xb = jnp.asarray(rng.normal(size=(4, 16, 8)), jnp.float32)
+    for backend in ("pallas", "xla", "ref"):
+        re, im = blas3.dft(xb, backend=backend)
+        assert re.shape == xb.shape and im.shape == xb.shape
+        want = np.fft.fft(np.asarray(xb, np.float64), axis=-2)
+        np.testing.assert_allclose(np.asarray(re) + 1j * np.asarray(im),
+                                   want, rtol=1e-3, atol=1e-3,
+                                   err_msg=backend)
+    re_b, im_b = blas3.dft(xb, backend="pallas")
+    re1, im1 = blas3.dft(xb[2], backend="pallas")
+    np.testing.assert_allclose(np.asarray(re_b[2]), np.asarray(re1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(im_b[2]), np.asarray(im1),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ----------------------------------------------------------------------
@@ -814,3 +937,231 @@ def test_shim_warning_attributed_to_in_repo_caller(rng):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             eval("facility.fdot(x, w)", ns)
+
+
+# ----------------------------------------------------------------------
+# Grid-native batched execution (batch is a grid dimension, not a vmap)
+# ----------------------------------------------------------------------
+
+def test_batched_contraction_is_one_pallas_call(monkeypatch, rng):
+    """A batched contraction (the MoE expert-dot spec) traces to exactly
+    ONE pallas_call with the batch axis leading the grid — not a vmapped
+    per-element re-trace."""
+    from repro.kernels import mma_gemm as G
+    calls = []
+    real = G.pl.pallas_call
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(G.pl, "pallas_call", spy)
+    # distinctive shapes so the jit cache cannot satisfy this trace
+    xe = jnp.asarray(rng.normal(size=(5, 23, 37)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(5, 37, 41)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    got = facility.contract(
+        "ecd,edf->ecf", xe, w1,
+        plan=Plan(ger=Ger.F32GER, backend="pallas", block=(16, 128, 128),
+                  out_dtype=jnp.float32))
+    assert lowering.DISPATCH_COUNTS[
+        ("pallas", "gemm", Ger.F32GER.value)] == 1
+    assert len(calls) == 1, calls
+    assert len(calls[0]) == 4 and calls[0][0] == 5, calls
+    np.testing.assert_allclose(
+        np.asarray(got), np.einsum("ecd,edf->ecf", xe, w1),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_batched_grid_native_bitwise_vs_vmapped_baseline_with_fringe(rng):
+    """Grid-native batch == the per-element (vmapped-era) dispatch
+    bit-for-bit at fp32 under a pinned block config — including
+    non-divisible M/N/K fringes at b > 1."""
+    b, m, k, n = 3, 50, 33, 70          # every dim off the block lattice
+    x = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, k, n)), jnp.float32)
+    blk = (32, 128, 128)
+    plan = Plan(ger=Ger.F32GER, backend="pallas", block=blk,
+                out_dtype=jnp.float32)
+    got = facility.contract("bmk,bkn->bmn", x, y, plan=plan)
+    base = jnp.stack([
+        facility.contract("mk,kn->mn", x[i], y[i], plan=plan)
+        for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.einsum("bmk,bkn->bmn", x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batched_acc_and_fused_epilogue_thread_through(rng):
+    """Accumulator seeds, accumulate forms, and fused epilogues — formerly
+    rejected on the batched Pallas path — thread through the batch grid
+    axis on every backend."""
+    b, m, k, n = 2, 16, 24, 32
+    x = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, k, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, m, n)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    want_acc = 0.5 * (np.einsum("bmk,bkn->bmn", x, y)
+                      + 2.0 * np.asarray(c))
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "bmk,bkn->bmn", x, y, acc=c,
+            plan=Plan(ger=Ger.F32GER, backend=backend, block=(16, 128, 128),
+                      alpha=0.5, beta=2.0, out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), want_acc,
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+    want_ep = np.maximum(np.einsum("bmk,bkn->bmn", x, y)
+                         + np.asarray(bias), 0.0)
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "bmk,bkn->bmn", x, y, bias=bias,
+            plan=Plan(ger=Ger.F32GER, backend=backend, block=(16, 128, 128),
+                      epilogue=E.Epilogue(bias=True, activation="relu"),
+                      out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), want_ep,
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_batched_autotune_cache_keyed_on_b(tmp_path, monkeypatch, rng):
+    """Batched dispatch consults the (b, m, n, k) cache key: a winner
+    planted under b=4 drives the batched launch and is invisible to the
+    same per-element shape at b=1 (and vice versa)."""
+    from repro.core import autotune, tiling
+    cache = autotune.AutotuneCache(tmp_path / "at.json")
+    monkeypatch.setattr(autotune, "_DEFAULT_CACHE", cache)
+    kind, m, n, k = Ger.F32GER, 16, 64, 32
+    planted = tiling.BlockConfig(8, 128, 128)
+    cache.put(autotune.cache_key(kind, m, n, k, b=4), planted,
+              source="traced", score=0.0)
+    assert lowering.resolve_block(kind, m, n, k, None, b=4) == (8, 128, 128)
+    assert lowering.resolve_block(kind, m, n, k, None) is None
+    assert autotune.lookup(kind, m, n, k, b=2) is None
+    # and the batched kernel consumes the planted winner end-to-end
+    xe = jnp.asarray(rng.normal(size=(4, m, k)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(4, k, n)), jnp.float32)
+    got = facility.contract(
+        "ecd,edf->ecf", xe, w1,
+        plan=Plan(ger=kind, backend="pallas", out_dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.einsum("ecd,edf->ecf", xe, w1),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# gemm.masked: the pm* prefixed forms as in-kernel predicates
+# ----------------------------------------------------------------------
+
+def test_masked_backends_agree_with_pm_oracle(rng):
+    """contract(..., masks=...) lowers via gemm.masked on every backend
+    and matches the ref.pm_ger oracle (exactly for integer families)."""
+    from repro.kernels import ref
+    m, k, n = 48, 64, 96
+    xm = jnp.asarray(rng.random(m) > 0.3)
+    ym = jnp.asarray(rng.random(n) > 0.3)
+    pm = jnp.asarray(rng.random(k) > 0.3)
+    for kind in (Ger.F32GER, Ger.BF16GER2, Ger.I16GER2):
+        x, y = _operands(kind, m, k, n, rng)
+        pol = policy(kind)
+        x, y = x.astype(pol.x_dtype), y.astype(pol.y_dtype)
+        want = ref.pm_ger(x, y, kind, xm, ym, pm)
+        for backend in ("pallas", "xla", "ref"):
+            got = facility.contract(
+                "mk,kn->mn", x, y, masks=(xm, ym, pm),
+                plan=Plan(ger=kind, backend=backend, block=(32, 128, 128),
+                          out_dtype=lowering.ACC))
+            _assert_close(kind, got, want)
+
+
+def test_masked_dispatches_via_gemm_masked_without_premasking(monkeypatch,
+                                                             rng):
+    """The acceptance check: dispatch counts name gemm.masked, the kernel
+    receives the ORIGINAL operands (no pre-masked HBM materialization),
+    and a NaN in a disabled row never reaches the output — the in-kernel
+    predicate disables the lane instead of multiplying it."""
+    from repro.core import lowering as L
+    seen = []
+    real = L._pallas_gemm_impl
+
+    def spy(x, y, c, bias, residual, xmask, ymask, pmask, **kw):
+        seen.append((np.asarray(x), np.asarray(y), xmask is not None))
+        return real(x, y, c, bias, residual, xmask, ymask, pmask, **kw)
+
+    monkeypatch.setattr(L, "_pallas_gemm_impl", spy)
+    m, k, n = 16, 32, 16
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    x = x.at[3].set(jnp.nan)                    # disabled row poisoned
+    y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    xm = jnp.ones(m, bool).at[3].set(False)
+    ym = jnp.ones(n, bool)
+    lowering.DISPATCH_COUNTS.clear()
+    got = facility.contract(
+        "mk,kn->mn", x, y, masks=(xm, ym, None),
+        plan=Plan(ger=Ger.F32GER, backend="pallas", block=(16, 128, 128),
+                  out_dtype=jnp.float32))
+    assert lowering.DISPATCH_COUNTS[
+        ("pallas", "gemm.masked", Ger.F32GER.value)] == 1
+    [(x_seen, y_seen, had_masks)] = seen
+    assert had_masks
+    np.testing.assert_array_equal(x_seen, np.asarray(x))  # un-masked x
+    np.testing.assert_array_equal(y_seen, np.asarray(y))
+    # the disabled row is exact zeros — never NaN — because the lane was
+    # disabled in-kernel, not multiplied by zero
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_array_equal(np.asarray(got[3]), np.zeros(n))
+
+
+def test_masked_batched_and_with_acc(rng):
+    """Masked forms compose with the batch grid axis and accumulator
+    seeds (matrix-granularity pm* chaining)."""
+    from repro.kernels import ref
+    b, m, k, n = 3, 24, 32, 40
+    x = jnp.asarray(rng.normal(size=(b, m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(b, k, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, m, n)), jnp.float32)
+    xm = jnp.asarray(rng.random(m) > 0.4)
+    ym = jnp.asarray(rng.random(n) > 0.4)
+    pm = jnp.asarray(rng.random(k) > 0.4)
+    want = np.stack([np.asarray(ref.pm_ger(x[i], y[i], Ger.F32GER,
+                                           xm, ym, pm, acc=c[i]))
+                     for i in range(b)])
+    for backend in ("pallas", "xla", "ref"):
+        got = facility.contract(
+            "bmk,bkn->bmn", x, y, acc=c, masks=(xm, ym, pm),
+            plan=Plan(ger=Ger.F32GER, backend=backend, block=(16, 128, 128),
+                      out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_masked_requires_natural_gemm_layout(rng):
+    x = jnp.zeros((4, 8), jnp.float32)
+    m = jnp.ones(4, bool)
+    with pytest.raises(ValueError, match="normalized"):
+        facility.contract("km,kn->mn", x, jnp.zeros((4, 6), jnp.float32),
+                          masks=(m, None, None))
+    with pytest.raises(ValueError, match="gemm-class"):
+        facility.contract("mk,nk->m", x, x, masks=(m, None, None))
+    with pytest.raises(ValueError, match="mask 0 has shape"):
+        facility.contract("mk,kn->mn", x, jnp.zeros((8, 6), jnp.float32),
+                          masks=(jnp.ones(5, bool), None, None))
+
+
+def test_mma_pm_dot_shim_routes_through_gemm_masked(rng):
+    """ops.mma_pm_dot is a deprecated shim over contract(..., masks=...):
+    it warns, dispatches via gemm.masked, and matches the oracle."""
+    from repro.kernels import ops, ref
+    x = jnp.asarray(rng.normal(size=(48, 64)), jnp.bfloat16)
+    y = jnp.asarray(rng.normal(size=(64, 96)), jnp.bfloat16)
+    xm = jnp.asarray(rng.random(48) > 0.3)
+    ym = jnp.asarray(rng.random(96) > 0.3)
+    pm = jnp.asarray(rng.random(64) > 0.3)
+    lowering.DISPATCH_COUNTS.clear()
+    with pytest.warns(DeprecationWarning, match="facility.contract"):
+        got = ops.mma_pm_dot(x, y, kind=Ger.BF16GER2, xmask=xm, ymask=ym,
+                             pmask=pm)
+    assert lowering.DISPATCH_COUNTS[
+        ("pallas", "gemm.masked", Ger.BF16GER2.value)] == 1
+    want = ref.pm_ger(x, y, Ger.BF16GER2, xm, ym, pm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
