@@ -1,0 +1,76 @@
+"""Attention prefill: causal-bounded flash grid vs full grid, flash vs xla.
+
+The attn op-class rows track the two claims of the attention PR:
+
+  * ``flashattn_S<s>`` — the causal prefill kernel's *bounded* KV grid
+    (``attn_grid_plan``: only live (qi, ki) blocks are issued) against the
+    same kernel forced onto the full rectangular grid.  Wall clock of both
+    (interpret mode on CPU — relative, not absolute) plus the v5e
+    roofline-projected utilization, where the full grid is charged its
+    wasted rank-k updates (``causal=False`` FLOPs for the same live-pair
+    numerator).  Bounded must never issue more grid steps or project
+    slower than full.
+  * ``attnback_S<s>`` — the contract-dispatched flash (pallas) path vs the
+    shardable chunked-xla lowering at the same shape: the
+    flash-vs-chunked-xla columns the serving roadmap tracks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import facility
+from repro.core.facility import Plan
+from repro.core.precision import Ger, policy
+from repro.kernels import mma_attention as FA
+from repro.roofline.analysis import attn_projected_util
+
+
+def run():
+    rng = np.random.default_rng(0)
+    kind = Ger.BF16GER2
+    pol = policy(kind)
+    b, h, d = 2, 4, 64
+    bq = bk = 128
+
+    for s in (256, 512):
+        q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+
+        bounded = jax.jit(lambda q: FA.mma_flash_attention(
+            q, q, q, causal=True, block_q=bq, block_k=bk, interpret=True))
+        full = jax.jit(lambda q: FA.mma_flash_attention(
+            q, q, q, causal=True, block_q=bq, block_k=bk,
+            bound_grid=False, interpret=True))
+        us_bounded = time_fn(bounded, q)
+        us_full = time_fn(full, q)
+        steps_bounded = FA.attn_live_steps(s, s, bq, bk, causal=True)
+        steps_full = (s // bq) * (s // bk)
+        util_bounded = attn_projected_util(b * h, s, s, d, bq, bk, pol,
+                                           causal=True)
+        # the full grid does causal=False FLOPs/traffic for the same
+        # causal live-pair numerator: the wasted-update charge
+        util_full = attn_projected_util(b * h, s, s, d, bq, bk, pol,
+                                        causal=False) \
+            * (FA.attn_live_pairs(s, s, causal=True)
+               / FA.attn_live_pairs(s, s, causal=False))
+        emit(f"flashattn_S{s}", us_bounded,
+             f"us_bounded={us_bounded:.1f};us_full_grid={us_full:.1f};"
+             f"grid_steps_bounded={steps_bounded};"
+             f"grid_steps_full={steps_full};"
+             f"v5e_util_bounded={util_bounded:.3f};"
+             f"v5e_util_full_grid={util_full:.3f};"
+             f"block={bq}x{bk}")
+
+        plan_p = Plan(ger=kind, backend="pallas", causal=True,
+                      block=(bq, bk), interpret=True)
+        plan_x = Plan(ger=kind, backend="xla", causal=True)
+        flash = jax.jit(lambda q: facility.contract(
+            facility.ATTN, q, q, q, plan=plan_p))
+        chunked = jax.jit(lambda q: facility.contract(
+            facility.ATTN, q, q, q, plan=plan_x))
+        us_flash = time_fn(flash, q)
+        us_xla = time_fn(chunked, q)
+        emit(f"attnback_S{s}", us_flash,
+             f"us_flash={us_flash:.1f};us_chunked_xla={us_xla:.1f};"
+             f"bh={b * h};d={d}")

@@ -13,6 +13,9 @@ Paper mapping:
     sconv        -> Section V-B (implicit-im2col convolution; contract-
                     routed conv op-class vs legacy direct lax.conv)
     dft          -> Section III (complex op-class DFT vs library FFT)
+    attention    -> "building blocks of other computations" close (attn
+                    op-class: causal-bounded flash grid vs full grid,
+                    flash vs chunked-xla)
     power_proxy  -> Figure 12 (operand traffic per FLOP — the power story)
     ger_kinds    -> Tables I/II (every rank-k update family vs oracle)
     step_bench   -> framework-level train/decode step times
@@ -22,20 +25,21 @@ import argparse
 import json
 import sys
 
-BENCH_NAMES = ("dgemm", "hpl_like", "sconv", "dft", "power_proxy",
-               "ger_kinds", "step_bench")
+BENCH_NAMES = ("dgemm", "hpl_like", "sconv", "dft", "attention",
+               "power_proxy", "ger_kinds", "step_bench")
 
 
 def _load_benchmarks():
     """Import the benchmark modules *before* any CSV output so an import
     error exits nonzero without emitting a partial header."""
-    from benchmarks import dft, dgemm, ger_kinds, hpl_like, power_proxy, \
-        sconv, step_bench
+    from benchmarks import attention, dft, dgemm, ger_kinds, hpl_like, \
+        power_proxy, sconv, step_bench
     return {
         "dgemm": dgemm.run,
         "hpl_like": hpl_like.run,
         "sconv": sconv.run,
         "dft": dft.run,
+        "attention": attention.run,
         "power_proxy": power_proxy.run,
         "ger_kinds": ger_kinds.run,
         "step_bench": step_bench.run,

@@ -42,6 +42,16 @@ if grep -nE "jax\.vmap|jax\.numpy\.vectorize" src/repro/core/lowering.py; then
 fi
 echo "grid-owns-batch OK"
 
+# Attention is a registry op-class: models route it through
+# facility.contract(facility.ATTN, ...) (layers.sdpa), never the kernel
+# module directly — direct flash_attention calls are a deprecated shim.
+if grep -rnE "^[^#]*(import|from)[^#]*mma_attention" src/repro/models --include="*.py"; then
+    echo "FAIL: models/ imports mma_attention directly — attention" \
+         "dispatches through facility.contract's attn op-class" >&2
+    exit 1
+fi
+echo "attn-is-an-op-class OK"
+
 echo "== tier-1 tests =="
 # tests/conftest.py escalates the deprecated shims' DeprecationWarnings to
 # errors for in-repo (repro.*) callers.
@@ -66,5 +76,25 @@ for n in (128, 256):
     assert d["us_vmapped"] > 0 and d["us_grid_native"] > 0, (n, d)
     assert d["v5e_util_grid_native"] > d["v5e_util_vmapped"], (n, d)
 print("BENCH_dgemm.json OK: batched sweep tracks grid-native vs vmapped")
+EOF
+
+    echo "== attention benchmark smoke (<120s) =="
+    timeout 120 python -m benchmarks.run --only attention \
+        --json BENCH_attention.json
+    python - <<'EOF'
+import json
+blob = json.load(open("BENCH_attention.json"))
+rows = {r["name"]: r["derived"] for r in blob["benchmarks"]}
+assert not blob["failed"], blob["failed"]
+for s in (256, 512):
+    d = rows[f"flashattn_S{s}"]
+    # the causal-bounded grid must issue strictly fewer steps than the
+    # rectangular grid and never project worse utilization
+    assert d["grid_steps_bounded"] < d["grid_steps_full"], (s, d)
+    assert d["v5e_util_bounded"] >= d["v5e_util_full_grid"], (s, d)
+    assert d["us_bounded"] > 0 and d["us_full_grid"] > 0, (s, d)
+    b = rows[f"attnback_S{s}"]
+    assert b["us_flash"] > 0 and b["us_chunked_xla"] > 0, (s, b)
+print("BENCH_attention.json OK: bounded grid < full grid on every S")
 EOF
 fi

@@ -92,15 +92,25 @@ class AutotuneCache:
 
     def get(self, key: str) -> tiling.BlockConfig | None:
         ent = self._load().get(key)
-        if not ent:
-            return None
+        if not ent or len(ent.get("block", ())) != 3:
+            return None                 # absent, or a 2-dim attn winner
         return tiling.BlockConfig(*ent["block"])
 
     def put(self, key: str, cfg: tiling.BlockConfig, *, source: str,
             score: float) -> None:
+        self.put_raw(key, [cfg.bm, cfg.bn, cfg.bk], source=source,
+                     score=score)
+
+    def get_raw(self, key: str) -> dict | None:
+        """The stored entry itself — attn winners keep 2-element blocks
+        ((bq, bk)), so they bypass the 3-dim BlockConfig view of get()."""
+        return self._load().get(key)
+
+    def put_raw(self, key: str, block: list[int], *, source: str,
+                score: float) -> None:
         with self._lock:
             entries = self._load()
-            entries[key] = {"block": [cfg.bm, cfg.bn, cfg.bk],
+            entries[key] = {"block": list(block),
                             "source": source, "score": score}
             try:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -318,4 +328,150 @@ def autotune(kind: precision.Ger, m: int, n: int, k: int, *, b: int = 1,
 
     tiling.assert_fits_vmem(best, kind)
     cache.put(key, best, source=source, score=float(score))
+    return best
+
+
+# ----------------------------------------------------------------------
+# Attention (bq, bk) block search — the attn op-class's tuner
+# ----------------------------------------------------------------------
+# The flash kernel's blocks live on a different lattice than the GEMM's:
+# (bq, bk) must DIVIDE (Sq, Sk) (the fringe lives in the bounded grid
+# plan, not padded operands) and the VMEM residents are the (bq, d)
+# O-accumulator, the m/l columns, the streamed Q/K/V panels, and the
+# (bq, bk) score tile.  Winners persist in the same JSON store under
+# ``<ger>|attn<BH>x<Sq>x<Sk>x<D>|<epilogue>|<backend>`` keys with
+# 2-element blocks.
+
+ATTN_BLOCK_LADDER = (512, 256, 128, 64, 32, 16, 8)
+
+
+def attn_cache_key(kind: precision.Ger, bh: int, sq: int, sk: int, d: int,
+                   epilogue_key: str = "none",
+                   backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{kind.value}|attn{bh}x{sq}x{sk}x{d}|{epilogue_key}|{backend}"
+
+
+def attn_vmem_bytes(bq: int, bk: int, d: int,
+                    pol: precision.GerPolicy) -> int:
+    acc = 4 * (bq * d + 2 * bq)                  # O accumulator + m + l
+    panels = (bq * d + 2 * bk * d) * pol.in_bytes
+    scores = 4 * bq * bk
+    return acc + panels + scores
+
+
+def lookup_attn(kind: precision.Ger, bh: int, sq: int, sk: int, d: int,
+                epilogue_key: str = "none", backend: str | None = None,
+                cache: AutotuneCache | None = None
+                ) -> tuple[int, int] | None:
+    """Cache-only consult (what the attn lowering does on dispatch) —
+    never searches; stale entries that no longer divide the problem or
+    fit VMEM fall back to the divisor heuristic (returns None)."""
+    cache = cache if cache is not None else default_cache()
+    ent = cache.get_raw(attn_cache_key(kind, bh, sq, sk, d, epilogue_key,
+                                       backend))
+    if not ent or len(ent.get("block", ())) != 2:
+        return None
+    bq, bk = ent["block"]
+    pol = precision.policy(kind)
+    if sq % bq or sk % bk or \
+            attn_vmem_bytes(bq, bk, d, pol) > tiling.VMEM_BUDGET:
+        return None
+    return int(bq), int(bk)
+
+
+def attn_candidate_blocks(sq: int, sk: int, d: int, kind: precision.Ger,
+                          vmem_budget: int = tiling.VMEM_BUDGET
+                          ) -> list[tuple[int, int]]:
+    """Every ladder pair that divides the problem and fits the budget."""
+    pol = precision.policy(kind)
+    bqs = [b for b in ATTN_BLOCK_LADDER if b <= sq and sq % b == 0] or [sq]
+    bks = [b for b in ATTN_BLOCK_LADDER if b <= sk and sk % b == 0] or [sk]
+    return [(bq, bk) for bq in bqs for bk in bks
+            if attn_vmem_bytes(bq, bk, d, pol) <= vmem_budget]
+
+
+def autotune_attn(kind: precision.Ger, bh: int, sq: int, sk: int, d: int,
+                  *, causal: bool = True, q_offset: int = 0,
+                  window: int | None = None, epilogue_key: str = "none",
+                  backend: str | None = None,
+                  cache: AutotuneCache | None = None, top_k: int = TOP_K,
+                  force: bool = False) -> tuple[int, int]:
+    """Find (or recall) the best (bq, bk) for one attention shape.
+
+    Ranks the dividing-candidate set by the causal-aware roofline prior
+    (``roofline.analysis.attn_projected_time``); on TPU the top-K are
+    timed with real bounded-grid flash launches, on CPU the prior IS the
+    score after a one-shot interpret validation run.
+    """
+    backend = backend or jax.default_backend()
+    cache = cache if cache is not None else default_cache()
+    key = attn_cache_key(kind, bh, sq, sk, d, epilogue_key, backend)
+    if not force:
+        hit = lookup_attn(kind, bh, sq, sk, d, epilogue_key, backend, cache)
+        if hit is not None:
+            return hit
+
+    pol = precision.policy(kind)
+    cands = attn_candidate_blocks(sq, sk, d, kind)
+    prior = lambda c: _roofline.attn_projected_time(   # noqa: E731
+        bh, sq, sk, d, c[0], c[1], pol, causal=causal, q_offset=q_offset,
+        window=window)
+    ranked = sorted(cands, key=prior)
+
+    def _run(bq, bk, interpret):
+        # The (b, h) factorization of bh is irrelevant to the launch cost
+        # (grid volume b*h*T is invariant), so heads collapse to 1 — but
+        # the epilogue this cache key names IS part of the measured
+        # deprime, so reconstruct it from the key fragments.
+        from repro.kernels import epilogue as _epilogue
+        from repro.kernels import mma_attention as _attn
+        ep = bias = residual = None
+        if epilogue_key != "none":
+            parts = epilogue_key.split("+")
+            ep = _epilogue.Epilogue(
+                bias="bias" in parts,
+                activation=next((p for p in parts
+                                 if p in _epilogue.ACTIVATIONS), None),
+                residual="residual" in parts)
+            bias = jnp.zeros((d,), jnp.float32) if ep.bias else None
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(max(bh, 1), sq, 1, d)),
+                        pol.x_dtype)
+        k = jnp.asarray(rng.normal(size=(max(bh, 1), sk, 1, d)),
+                        pol.x_dtype)
+        if ep is not None and ep.residual:
+            residual = jnp.zeros(q.shape, jnp.float32)
+        return _attn.mma_flash_attention(
+            q, k, k, causal=causal, q_offset=q_offset, window=window,
+            block_q=bq, block_k=bk, ep=ep, bias=bias, residual=residual,
+            interpret=interpret)
+
+    if backend == "tpu":
+        import time
+        scored = []
+        for bq, bk in ranked[:top_k]:
+            run = jax.jit(lambda: _run(bq, bk, False))
+            jax.block_until_ready(run())
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            scored.append(((bq, bk), time.perf_counter() - t0))
+        best, score = min(scored, key=lambda cs: cs[1])
+        source = "measured"
+    else:
+        best, score = None, float("inf")
+        for bq, bk in ranked[:top_k]:
+            try:
+                out = _run(bq, bk, True)
+                if bool(jnp.isfinite(out.astype(jnp.float32)).all()):
+                    best, score = (bq, bk), prior((bq, bk))
+                    break
+            except Exception:
+                continue
+        if best is None:
+            best = ranked[0] if ranked else (sq, sk)
+            score = prior(best)
+        source = "traced"
+
+    cache.put_raw(key, list(best), source=source, score=float(score))
     return best

@@ -51,6 +51,13 @@ CONV2D = lowering.CONV2D                      # "nhwc,hwio->nhwo"
 CONV1D = lowering.CONV1D                      # "nlc,lio->nlo"
 CONV1D_DEPTHWISE = lowering.CONV1D_DEPTHWISE  # "nlc,lc->nlc"
 
+# Canonical fused-attention spec (the attn op-class): the one three-operand
+# builtin — softmax couples the score and value contractions, so no
+# two-operand spec can name it.  q (B, Sq, H, D); k, v (B, Sk, KVH, D);
+# causal/window/q_offset ride in the Plan, the (B, Sk) valid-slot
+# predicate as ``masks=(valid,)``.
+ATTN = lowering.ATTN                          # "bqhd,bkhd->bqhd"
+
 
 @dataclasses.dataclass(frozen=True)
 class FacilityConfig:
@@ -81,7 +88,8 @@ def configure(cfg: FacilityConfig):
         _CONFIG.reset(token)
 
 
-def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray, *,
+def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray,
+             z: jnp.ndarray | None = None, *,
              plan: Plan | None = None,
              acc: jnp.ndarray | None = None,
              bias: jnp.ndarray | None = None,
@@ -101,15 +109,21 @@ def contract(spec: str, x: jnp.ndarray, y: jnp.ndarray, *,
     lowering applies them to the streamed panels in-kernel, never
     pre-masking operands in HBM).
 
+    ``z`` is the value operand of the canonical :data:`ATTN` spec — the
+    facility's one three-operand builtin (``contract(facility.ATTN, q, k,
+    v, plan=Plan(causal=..., window=..., q_offset=...))``); there,
+    ``masks`` is the 1-tuple ``(valid,)`` filled-KV-slot predicate.
+
     Dispatch goes through the lowering registry (``repro.core.lowering``):
     specs that normalize to (batched) 2-D GEMMs reach the autotuned Pallas
     kernels — batch rides as a grid dimension, one ``pallas_call`` per
-    contraction — or the shardable ``lax.dot_general`` lowering;
-    everything else falls back to the general einsum lowering.
+    contraction — or the shardable ``lax.dot_general`` lowering; the
+    canonical conv/attn specs reach their op-classes; everything else
+    falls back to the general einsum lowering.
     """
-    return lowering.execute(spec, x, y, cfg=current(), plan=plan, acc=acc,
-                            bias=bias, residual=residual, dequant=dequant,
-                            masks=masks)
+    return lowering.execute(spec, x, y, z, cfg=current(), plan=plan,
+                            acc=acc, bias=bias, residual=residual,
+                            dequant=dequant, masks=masks)
 
 
 # ----------------------------------------------------------------------

@@ -25,6 +25,9 @@ Lowerings register per ``(backend, op_class, ger, fused)`` key:
     normalized to the implicit-im2col rank-(KW*C) update form; depthwise
     runs a resident-accumulator VPU kernel), ``"complex"`` (complex-dtype
     operands — four real accumulate-form gers, pp/np, batched or not),
+    ``"attn"`` (the canonical three-operand ATTN spec — fused flash
+    attention on Pallas with a causal-bounded grid, the chunked two-dot
+    math on xla, the pinned two-contract oracle on ref),
     ``"einsum"`` (general contraction fallback).
   * ``ger``/``fused``: optional specializations; lookup falls back from the
     most specific key to ``(backend, op_class, None, None)``.
@@ -105,6 +108,11 @@ class Plan:
     # Conv op-class only (spec is one of the canonical conv specs below):
     stride: object = 1                # int or per-spatial-dim tuple
     padding: str = "valid"            # valid | same | causal (1-D left pad)
+    # Attn op-class only (spec is the canonical ATTN spec below):
+    causal: bool = False              # q attends k with k_pos <= q_pos
+    window: int | None = None         # sliding window: q_pos - k_pos < window
+    q_offset: int = 0                 # absolute position of q[0] (decode)
+    q_chunk: int = 0                  # xla lowering's q-chunk (0 = default)
 
 
 # ----------------------------------------------------------------------
@@ -123,6 +131,24 @@ CONV1D_DEPTHWISE = "nlc,lc->nlc"      # per-channel taps (groups == C)
 # spec -> (spatial ndim, depthwise)
 _CONV_SPECS = {CONV2D: (2, False), CONV1D: (1, False),
                CONV1D_DEPTHWISE: (1, True)}
+
+
+# ----------------------------------------------------------------------
+# Attn spec: fused scaled-dot-product attention (paper's "building blocks
+# of other computations" close) — a three-operand op no two-operand einsum
+# can name (the softmax couples the two contractions), so the facility
+# names it architecturally, like the conv specs.  q: (B, Sq, H, D);
+# k, v: (B, Sk, KVH, D) with H % KVH == 0 (GQA head groups).
+# ----------------------------------------------------------------------
+
+ATTN = "bqhd,bkhd->bqhd"
+
+# The xla attn lowering's default query-chunk length: at most
+# (B, H, chunk, Sk) scores are live at once (memory-efficient attention).
+ATTN_Q_CHUNK = 1024
+
+# Families the fused kernel accepts: float operands, f32 accumulator.
+_ATTN_GERS = (Ger.F32GER, Ger.BF16GER2, Ger.F16GER2)
 
 
 # ----------------------------------------------------------------------
@@ -496,6 +522,14 @@ class Op:
     # gemm.masked op-class: (xmask (M,), ymask (N,), pmask (K,)) bool
     # predicates on the normalized GEMM axes; each entry may be None.
     masks: tuple | None = None
+    # attn op-class: the value operand, the (B, Sk) valid-slot predicate,
+    # and the static attention vocabulary resolved from the Plan.
+    z: jnp.ndarray | None = None
+    valid: jnp.ndarray | None = None
+    causal: bool = False
+    window: int | None = None
+    q_offset: int = 0
+    q_chunk: int = 0
 
     @property
     def fused(self) -> bool:
@@ -1148,6 +1182,184 @@ for _b in BACKENDS:
     _REGISTRY[(_b, "complex", None, None)] = _lower_complex
 
 
+# ---- attn op-class (fused scaled-dot-product attention) --------------
+# Three lowerings over one convention: causal/window/q_offset/valid are
+# structural predicates on the score tile; rows whose every slot is masked
+# yield exact zeros.  Pallas runs the flash kernel with the causal-bounded
+# grid; xla runs the chunked two-dot math the SPMD partitioner can shard;
+# ref is the pinned two-contract oracle (mma_attention.ref_attention).
+
+def _attn_blocks(op: Op, bh: int, sq: int, sk: int, d: int
+                 ) -> tuple[int, int]:
+    """Resolve the (bq, bk) attention blocks: explicit Plan.block wins,
+    then a cached autotune winner keyed on (bh, sq, sk, d), else the
+    largest divisors of Sq/Sk not above 128 (the kernel requires dividing
+    blocks; the fringe lives in the grid plan, not padded operands)."""
+    if op.block is not None:
+        bq, bk = op.block
+        return min(bq, sq), min(bk, sk)
+    from repro.core import autotune as _autotune
+    hit = _autotune.lookup_attn(op.ger, bh, sq, sk, d, op.epilogue.key)
+    if hit is not None:
+        return hit
+
+    def divisor(s: int, want: int) -> int:
+        for cand in range(min(want, s), 0, -1):
+            if s % cand == 0:
+                return cand
+        return 1
+
+    return divisor(sq, 128), divisor(sk, 128)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "block", "causal", "window", "q_offset", "interpret",
+    "out_dtype", "epilogue"))
+def _pallas_attn_impl(q, k, v, bias, residual, valid, *, kind, block,
+                      causal, window, q_offset, interpret, out_dtype,
+                      epilogue):
+    from repro.kernels import mma_attention as _attn
+    pol = precision.policy(kind)
+    ep = epilogue if epilogue is not None and not epilogue.is_identity \
+        else None
+    return _attn.mma_flash_attention(
+        q.astype(pol.x_dtype), k.astype(pol.x_dtype),
+        v.astype(pol.y_dtype), causal=causal, q_offset=q_offset,
+        window=window, valid=valid, block_q=block[0], block_k=block[1],
+        ep=ep, bias=bias, residual=residual,
+        out_dtype=out_dtype if out_dtype is not None else pol.acc_dtype,
+        interpret=interpret)
+
+
+@register("pallas", "attn")
+def _lower_pallas_attn(op: Op):
+    """The flash kernel: grid-native (B, H, live-kv-steps) with GQA
+    head-group broadcast in the BlockSpec index maps, the causal/window
+    bounds shrinking the flattened KV grid, and the autotune cache
+    consulted per (bh, sq, sk, d) for the (bq, bk) blocks."""
+    b, sq, h, d = op.x.shape
+    sk = op.y.shape[1]
+    block = _attn_blocks(op, b * h, sq, sk, d)
+    return _pallas_attn_impl(
+        op.x, op.y, op.z, op.bias, op.residual, op.valid, kind=op.ger,
+        block=block, causal=op.causal, window=op.window,
+        q_offset=op.q_offset, interpret=op.interpret,
+        out_dtype=op.out_dtype, epilogue=op.epilogue)
+
+
+def attend_chunk(q, k, v, *, q_pos, kv_pos, causal, window, valid):
+    """One query chunk against full K/V — THE chunked-attention math,
+    shared by the xla attn lowering's scan below and by ``layers.sdpa``'s
+    ring-buffer decode path (so the two can never drift).
+
+    q (B, C, H, D) with K/V already head-repeated; ``q_pos`` (1|B, C) and
+    ``kv_pos`` (1|B, Sk) absolute positions (ring-buffer caches pass
+    data-dependent kv_pos); ``valid`` (1|B, Sk) or None.  Returns the
+    fp32 accumulator; rows whose every slot is masked yield exact zeros —
+    the convention shared with the flash kernel's masked-block guard and
+    l == 0 deprime guard.
+    """
+    s = lax.dot_general(
+        q, k, (((3,), (3,)), ((0, 2), (0, 2))),
+        preferred_element_type=jnp.float32)              # (B, H, C, Sk)
+    s = s * (q.shape[-1] ** -0.5)
+    mask = jnp.ones((1, q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        mask = mask & (q_pos[:, :, None] >= kv_pos[:, None, :])
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    if valid is not None:
+        mask = mask & valid[:, None, :]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax degenerates to uniform mean(V); zero them
+    p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
+    return lax.dot_general(
+        p.astype(v.dtype), v, (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.float32).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "causal", "window", "q_offset", "q_chunk", "out_dtype",
+    "epilogue"))
+def _xla_attn_impl(q, k, v, bias, residual, valid, *, kind, causal, window,
+                   q_offset, q_chunk, out_dtype, epilogue):
+    """Chunked two-dot attention (the layers._attend math, facility-owned):
+    a lax.scan over query chunks bounds live scores to (B, H, chunk, Sk),
+    and a ragged tail chunk keeps the bound for any Sq — no silent
+    fall-back to unchunked attention when Sq % q_chunk != 0."""
+    from repro.kernels import epilogue as _epilogue
+    pol = precision.policy(kind)
+    q = q.astype(pol.x_dtype)
+    k = k.astype(pol.x_dtype)
+    v = v.astype(pol.y_dtype)
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (b, k.shape[1], kvh, rep, d)
+                             ).reshape(b, k.shape[1], h, d)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (b, v.shape[1], kvh, rep, d)
+                             ).reshape(b, v.shape[1], h, d)
+    if valid is not None:
+        valid = jnp.asarray(valid, bool).reshape(-1, k.shape[1])
+    pos = (jnp.arange(sq) + q_offset)[None]              # (1, Sq)
+    kv_pos = jnp.arange(k.shape[1])[None]                # (1, Sk)
+
+    chunk = min(q_chunk or ATTN_Q_CHUNK, sq)
+    nc, tail = divmod(sq, chunk)
+    main = nc * chunk
+    if nc > 1:
+        qc = q[:, :main].reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+        pc = pos[:, :main].reshape(1, nc, chunk).transpose(1, 0, 2)
+
+        def body(_, xs):
+            qb, pb = xs
+            return None, attend_chunk(qb, k, v, q_pos=pb, kv_pos=kv_pos,
+                                      causal=causal, window=window,
+                                      valid=valid)
+
+        _, outs = lax.scan(body, None, (qc, pc))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, main, h, d)
+    else:
+        out = attend_chunk(q[:, :main], k, v, q_pos=pos[:, :main],
+                           kv_pos=kv_pos, causal=causal, window=window,
+                           valid=valid)
+    if tail:
+        out_tail = attend_chunk(q[:, main:], k, v, q_pos=pos[:, main:],
+                                kv_pos=kv_pos, causal=causal,
+                                window=window, valid=valid)
+        out = jnp.concatenate([out, out_tail], axis=1)
+    out = _epilogue.apply(out, epilogue, bias=bias, residual=residual)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+@register("xla", "attn")
+def _lower_xla_attn(op: Op):
+    return _xla_attn_impl(
+        op.x, op.y, op.z, op.bias, op.residual, op.valid, kind=op.ger,
+        causal=op.causal, window=op.window, q_offset=op.q_offset,
+        q_chunk=op.q_chunk, out_dtype=op.out_dtype, epilogue=op.epilogue)
+
+
+@register("ref", "attn")
+def _lower_ref_attn(op: Op):
+    """The pinned two-contract oracle: scores and values run as architected
+    gers on the pinned xla gemm lowering, softmax eagerly between them."""
+    from repro.kernels import epilogue as _epilogue
+    from repro.kernels import mma_attention as _attn
+    pol = op.pol
+    out = _attn.ref_attention(
+        op.x.astype(pol.x_dtype), op.y.astype(pol.x_dtype),
+        op.z.astype(pol.y_dtype), causal=op.causal, window=op.window,
+        q_offset=op.q_offset, valid=op.valid)
+    out = _epilogue.apply(out, op.epilogue, bias=op.bias,
+                          residual=op.residual)
+    return out.astype(op.out_dtype) if op.out_dtype is not None else out
+
+
 # ---- general einsum fallback -----------------------------------------
 
 @register("xla", "einsum")
@@ -1172,9 +1384,9 @@ _REGISTRY[("ref", "einsum", None, None)] = _lower_xla_einsum
 # The driver
 # ----------------------------------------------------------------------
 
-def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
-            bias=None, residual=None, dequant: Dequant | None = None,
-            masks=None):
+def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
+            acc=None, bias=None, residual=None,
+            dequant: Dequant | None = None, masks=None):
     """Resolve ``plan`` against ``cfg``, pick a lowering, run it.
 
     This is the body of ``facility.contract`` — kept here so the facility
@@ -1182,7 +1394,10 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
     prefixed-form predicates ``(xmask, ymask, pmask)`` on the normalized
     M/N/K axes (each entry optional) — routes to the ``gemm.masked``
     op-class, where the Pallas lowering applies them to the streamed
-    panels in-kernel instead of pre-masking operands in HBM.
+    panels in-kernel instead of pre-masking operands in HBM.  ``z`` is the
+    value operand of the canonical ``ATTN`` spec (the one three-operand
+    builtin); for attn, ``masks`` is the 1-tuple ``(valid,)`` KV-slot
+    predicate.
     """
     from repro.kernels import epilogue as _epilogue
 
@@ -1207,7 +1422,60 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
     conv_info = _CONV_SPECS.get(spec)
     stride: tuple[int, ...] = ()
     parsed = None
-    if conv_info is not None:
+    valid = None
+    if z is not None and spec != ATTN:
+        raise ValueError(
+            f"a third operand is attn-spec vocabulary "
+            f"(facility.ATTN), not {spec!r}")
+    if spec == ATTN:
+        op_class = "attn"
+        if z is None:
+            raise ValueError(
+                f"the attn spec {spec!r} is a three-operand contraction: "
+                f"contract(facility.ATTN, q, k, v, ...)")
+        if jnp.ndim(x) != 4 or jnp.ndim(y) != 4 or jnp.shape(y) != \
+                jnp.shape(z):
+            raise ValueError(
+                f"attn wants q (B, Sq, H, D) and k == v shapes "
+                f"(B, Sk, KVH, D); got {jnp.shape(x)} x {jnp.shape(y)} x "
+                f"{jnp.shape(z)}")
+        b, sq, h, d = jnp.shape(x)
+        bk_, sk, kvh, dk_ = jnp.shape(y)
+        if bk_ != b or dk_ != d or h % kvh:
+            raise ValueError(
+                f"attn batch/head/depth mismatch: q {jnp.shape(x)} vs "
+                f"k/v {jnp.shape(y)} (H must be a multiple of KVH)")
+        if ger not in _ATTN_GERS:
+            raise ValueError(
+                f"attn lowers float families with f32 accumulators only "
+                f"({[g.value for g in _ATTN_GERS]}), not {ger.value}")
+        if (acc is not None or dequant is not None or plan.saturating
+                or plan.neg_product or plan.neg_acc
+                or plan.alpha != 1.0 or plan.beta != 1.0):
+            raise ValueError(
+                "attn contractions take no accumulator seed, dequant, "
+                "saturating, or alpha/beta/neg accumulate forms — only a "
+                "fused epilogue and the causal/window/q_offset/valid "
+                "predicates")
+        if plan.block is not None and len(plan.block) != 2:
+            raise ValueError(
+                f"attn blocks are (bq, bk); got {plan.block!r}")
+        if plan.window is not None and plan.window < 1:
+            raise ValueError(f"window must be >= 1, got {plan.window!r}")
+        if masks is not None:
+            if len(masks) != 1:
+                raise ValueError(
+                    "attn masks is the 1-tuple (valid,) — the (B, Sk) "
+                    f"filled-KV-slot predicate — got {len(masks)} entries")
+            valid = masks[0]
+            if valid is not None:
+                vshape = jnp.shape(valid)
+                if vshape not in ((sk,), (1, sk), (b, sk)):
+                    raise ValueError(
+                        f"attn valid mask has shape {vshape}; want "
+                        f"({sk},) or ({b}, {sk})")
+            masks = None
+    elif conv_info is not None:
         nd, _ = conv_info
         op_class = "conv"
         s = plan.stride
@@ -1271,6 +1539,11 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
     if op_class != "conv" and (plan.stride != 1 or plan.padding != "valid"):
         raise ValueError(
             f"stride/padding apply to the conv specs only, not {spec!r}")
+    if op_class != "attn" and (plan.causal or plan.window is not None
+                               or plan.q_offset or plan.q_chunk):
+        raise ValueError(
+            f"causal/window/q_offset/q_chunk apply to the attn spec only, "
+            f"not {spec!r}")
     if dequant is not None and not ep.is_identity:
         raise ValueError("dequant and a fused epilogue are exclusive")
     if (parsed is not None and parsed.out_perm is not None
@@ -1313,7 +1586,9 @@ def execute(spec: str, x, y, *, cfg, plan: Plan | None = None, acc=None,
             epilogue=ep, block=plan.block, interpret=interpret,
             neg_product=plan.neg_product, neg_acc=plan.neg_acc,
             alpha=plan.alpha, beta=plan.beta, backend=backend,
-            stride=stride, padding=plan.padding, masks=masks)
+            stride=stride, padding=plan.padding, masks=masks,
+            z=z, valid=valid, causal=plan.causal, window=plan.window,
+            q_offset=plan.q_offset, q_chunk=plan.q_chunk)
     DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
     out = fn(op)
     if dequant is not None:

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import facility
 from repro.core.facility import DOT, Plan
@@ -135,36 +136,55 @@ Q_CHUNK = 1024
 
 
 def _attend(q, k, v, q_pos, kv_pos, *, causal, window, valid):
-    """One query block against full K/V.  q (B,C,H,D); q_pos (1|B, C)."""
-    scale = q.shape[-1] ** -0.5
-    scores = facility.contract("bqhd,bkhd->bhqk", q, k,
-                               plan=Plan(out_dtype=jnp.float32)) * scale
-    mask = jnp.ones((kv_pos.shape[0], q_pos.shape[-1], kv_pos.shape[-1]),
-                    bool)
-    if causal:
-        mask &= q_pos[:, :, None] >= kv_pos[:, None, :]
-    if window is not None:
-        mask &= q_pos[:, :, None] - kv_pos[:, None, :] < window
-    if valid is not None:
-        mask &= valid[:, None, :]
-    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    return facility.contract("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    """One query block against full K/V.  q (B,C,H,D); q_pos (1|B, C).
+
+    Thin policy wrapper over ``lowering.attend_chunk`` — the ONE chunked-
+    attention implementation, shared with the xla attn lowering, so the
+    ring-buffer decode path keeps the facility's conventions (notably:
+    fully-masked rows yield exact zeros, never a uniform-softmax mean(V))."""
+    from repro.core import lowering, precision
+    cfg = facility.current()
+    pol = precision.policy(cfg.ger)
+    out = lowering.attend_chunk(
+        q.astype(pol.x_dtype), k.astype(pol.x_dtype), v.astype(pol.y_dtype),
+        q_pos=q_pos, kv_pos=kv_pos, causal=causal, window=window,
+        valid=valid)
+    return out.astype(cfg.out_dtype)
 
 
 def sdpa(q, k, v, *, causal, window=None, q_offset=0, kv_positions=None,
          valid=None, q_chunk: int = 0):
     """Scaled dot-product attention via the facility.
 
-    q (B,Sq,H,D); k,v (B,Sk,H,D).  ``q_offset``: absolute position of q[0]
+    q (B,Sq,H,D); k,v (B,Sk,KVH,D) — KV heads are broadcast over their
+    GQA group (H % KVH == 0).  ``q_offset``: absolute position of q[0]
     (decode).  ``kv_positions`` (B,Sk) absolute positions for ring-buffer
     caches; ``valid`` (B,Sk) marks filled cache slots.
 
-    Long sequences are processed in query chunks (lax.scan) so at most
-    (B, H, q_chunk, Sk) scores are live — the memory-efficient-attention
-    analogue of keeping only one accumulator tile resident.
+    Prefill and training (dense positions, static ``q_offset``) dispatch
+    through the registry's ``attn`` op-class —
+    ``facility.contract(facility.ATTN, q, k, v, plan=Plan(causal=...,
+    window=..., q_offset=...))`` — so the Pallas backend runs the
+    causal-bounded flash kernel and the xla backend the shardable chunked
+    two-dot lowering (which bounds live scores to (B, H, chunk, Sk),
+    ragged tails included).  The ring-buffer decode path (arbitrary
+    ``kv_positions`` / traced offsets) keeps the explicit chunked scan
+    below, which since the attn-op-class PR also handles a ragged tail
+    chunk instead of silently falling back to unchunked attention.
     """
     sq, sk = q.shape[1], k.shape[1]
+    if kv_positions is None and isinstance(q_offset, (int, np.integer)):
+        plan = Plan(causal=causal, window=window, q_offset=int(q_offset),
+                    q_chunk=q_chunk or Q_CHUNK)
+        return facility.contract(
+            facility.ATTN, q, k, v, plan=plan,
+            masks=(valid,) if valid is not None else None)
+
+    # Ring-buffer / traced-offset decode path: positions are data, so the
+    # structural grid bounds cannot apply — mask in the score tile.
+    h, nkv = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, h // nkv)
+    v = _repeat_kv(v, h // nkv)
     if kv_positions is None:
         kv_pos = jnp.arange(sk)[None, :]                  # (1, Sk)
     else:
@@ -172,14 +192,15 @@ def sdpa(q, k, v, *, causal, window=None, q_offset=0, kv_positions=None,
     q_pos_full = (jnp.arange(sq) + q_offset)[None, :]     # (1, Sq)
 
     q_chunk = q_chunk or Q_CHUNK
-    if q_chunk <= 0 or sq <= q_chunk or sq % q_chunk != 0:
+    if q_chunk <= 0 or sq <= q_chunk:
         return _attend(q, k, v, q_pos_full, kv_pos, causal=causal,
                        window=window, valid=valid)
 
     b, _, h, d = q.shape
-    nc = sq // q_chunk
-    qc = q.reshape(b, nc, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
-    pc = q_pos_full.reshape(1, nc, q_chunk).transpose(1, 0, 2)
+    nc, tail = divmod(sq, q_chunk)
+    main = nc * q_chunk
+    qc = q[:, :main].reshape(b, nc, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    pc = q_pos_full[:, :main].reshape(1, nc, q_chunk).transpose(1, 0, 2)
 
     def body(_, xs):
         qb, pb = xs
@@ -187,7 +208,12 @@ def sdpa(q, k, v, *, causal, window=None, q_offset=0, kv_positions=None,
                              window=window, valid=valid)
 
     _, out = jax.lax.scan(body, None, (qc, pc))
-    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, main, h, d)
+    if tail:  # ragged tail chunk: keep the memory bound for any Sq
+        out_tail = _attend(q[:, main:], k, v, q_pos_full[:, main:], kv_pos,
+                           causal=causal, window=window, valid=valid)
+        out = jnp.concatenate([out, out_tail], axis=1)
+    return out
 
 
 def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
@@ -222,10 +248,12 @@ def apply_attention(p, x, cfg, *, cos_sin=None, kv=None, causal=None,
     # training shard heads instead — 'model' can only appear once.
     k = shard(k, "batch", "seq_kv" if kv is not None else None,
               None if kv is not None else "kv_heads", None)
-    kq = _repeat_kv(k, h // nkv)
-    vq = _repeat_kv(v, h // nkv)
     causal = cfg.causal if causal is None else causal
-    out = sdpa(q, kq, vq, causal=causal, window=window, q_offset=q_offset,
+    # KV heads go in un-repeated: the attn op-class broadcasts each KV
+    # head over its GQA group inside the kernel's BlockSpec index maps
+    # (never materializing the repeat in HBM); the ring-buffer decode
+    # path repeats inside sdpa.
+    out = sdpa(q, k, v, causal=causal, window=window, q_offset=q_offset,
                kv_positions=kv_positions, valid=valid)
     out = facility.contract(DOT, out.reshape(b, s, h * hd), p["wo"],
                             residual=residual)

@@ -8,6 +8,14 @@ enc-dec, stub frontend), vlm (qwen2-vl backbone, M-RoPE, stub frontend).
 Layer stacks are `lax.scan`s over stacked parameter pytrees (keeps HLO and
 compile times O(1) in depth — essential for the 95-layer dry runs), with a
 configurable remat policy applied to the scan body.
+
+Attention routing: training / prefill / cross-attention (dense positions,
+static q_offset) dispatch through the registry's ``attn`` op-class via
+``layers.sdpa`` — never ``kernels.mma_attention`` directly (scripts/ci.sh
+lints the import).  The ring-buffer decode steps below pass
+``kv_positions``/``valid`` slot predicates, which keeps them on sdpa's
+explicit chunked path (positions are data there, so the attn op-class's
+structural causal/window grid bounds cannot apply).
 """
 
 from __future__ import annotations

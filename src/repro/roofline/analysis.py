@@ -202,6 +202,78 @@ def gemm_projected_util(m: int, n: int, k: int, cfg, pol,
     return ideal / t if t else 0.0
 
 
+# ----------------------------------------------------------------------
+# Kernel-level attention roofline: the attn autotuner's ranking prior
+# ----------------------------------------------------------------------
+# Flash attention is two chained GEMMs per (qi, ki) score block — QKᵀ and
+# PV — with the O/m/l state resident in VMEM across the whole KV loop.
+# The cost model is causal-aware: the compute term charges only the
+# *issued* blocks of the bounded grid (``attn_grid_plan``), and the
+# memory term charges K/V panel reads per issued block, Q reads once per
+# query block, and exactly one O write — the accumulator-residency payoff.
+
+
+def attn_flops(bh: int, sq: int, sk: int, d: int, bq: int, bk: int, *,
+               causal: bool = True, q_offset: int = 0,
+               window: int | None = None) -> float:
+    """MXU FLOPs of the bounded flash grid (padded to block granularity:
+    a partially-masked block still does full rank-d / rank-bk work)."""
+    from repro.kernels import mma_attention as _attn
+    n_live = _attn.attn_live_steps(sq, sk, bq, bk, causal=causal,
+                                   q_offset=q_offset, window=window)
+    return 4.0 * bh * n_live * bq * bk * d      # QK^T + PV, 2*m*n*k each
+
+
+def attn_traffic_bytes(bh: int, sq: int, sk: int, d: int, bq: int, bk: int,
+                       pol, *, causal: bool = True, q_offset: int = 0,
+                       window: int | None = None) -> int:
+    """HBM traffic of the resident-accumulator kernel: Q once per query
+    block, one (bk, d) K and V panel per issued grid step, O written
+    exactly once; m/l/acc never leave VMEM."""
+    from repro.kernels import mma_attention as _attn
+    n_live = _attn.attn_live_steps(sq, sk, bq, bk, causal=causal,
+                                   q_offset=q_offset, window=window)
+    q_reads = bh * (-(-sq // bq)) * bq * d * pol.in_bytes
+    kv_reads = bh * n_live * 2 * bk * d * pol.in_bytes
+    o_write = bh * sq * d * pol.in_bytes
+    return q_reads + kv_reads + o_write
+
+
+def attn_projected_time(bh: int, sq: int, sk: int, d: int, bq: int,
+                        bk: int, pol, hw: dict = V5E, *,
+                        causal: bool = True, q_offset: int = 0,
+                        window: int | None = None,
+                        launches: int = 0) -> float:
+    """Roofline seconds for the bounded flash launch on the modeled chip;
+    ``launches`` > 0 charges the modeled per-launch dispatch overhead
+    (e.g. one per (b, h) for a vmapped-era trace, 1 for grid-native)."""
+    t_compute = attn_flops(bh, sq, sk, d, bq, bk, causal=causal,
+                           q_offset=q_offset, window=window) \
+        / hw["peak_flops"]
+    t_memory = attn_traffic_bytes(bh, sq, sk, d, bq, bk, pol,
+                                  causal=causal, q_offset=q_offset,
+                                  window=window) / hw["hbm_bw"]
+    return max(t_compute, t_memory) + launches * LAUNCH_OVERHEAD_S
+
+
+def attn_projected_util(bh: int, sq: int, sk: int, d: int, bq: int,
+                        bk: int, pol, hw: dict = V5E, *,
+                        causal: bool = True, q_offset: int = 0,
+                        window: int | None = None,
+                        launches: int = 0) -> float:
+    """Useful-FLOPs fraction of peak: the numerator counts only
+    position-level live (q, k) pairs, so block fringe padding and any
+    un-bounded grid waste both show up as lost utilization."""
+    from repro.kernels import mma_attention as _attn
+    pairs = _attn.attn_live_pairs(sq, sk, causal=causal, q_offset=q_offset,
+                                  window=window)
+    ideal = 4.0 * bh * pairs * d / hw["peak_flops"]
+    t = attn_projected_time(bh, sq, sk, d, bq, bk, pol, hw, causal=causal,
+                            q_offset=q_offset, window=window,
+                            launches=launches)
+    return ideal / t if t else 0.0
+
+
 def _encdec_split(cfg) -> tuple[float, float]:
     """Rough (encoder, decoder) active-param split for enc-dec archs:
     encoder = enc_layers * (attn + ffn); decoder adds cross-attn."""

@@ -1147,6 +1147,315 @@ def test_masked_requires_natural_gemm_layout(rng):
                           masks=(jnp.ones(5, bool), None, None))
 
 
+# ----------------------------------------------------------------------
+# Attn op-class: fused attention as a registry dispatch
+# ----------------------------------------------------------------------
+
+ATTN_PLAN_KW = dict(ger=Ger.F32GER, out_dtype=jnp.float32, block=(32, 32))
+
+
+def _attn_operands(rng, b=2, sq=64, sk=64, h=4, kvh=2, d=32,
+                   dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, sk, kvh, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, sk, kvh, d)), dtype)
+    return q, k, v
+
+
+def _attn_all_backends(q, k, v, plan_kw, masks=None, **contract_kw):
+    outs = {}
+    for backend in ("pallas", "xla", "ref"):
+        outs[backend] = facility.contract(
+            facility.ATTN, q, k, v, masks=masks,
+            plan=Plan(backend=backend, **plan_kw), **contract_kw)
+    return outs
+
+
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+def test_attn_backends_agree(causal, rng):
+    """facility.contract(ATTN, q, k, v) lowers equivalently on
+    pallas (bounded flash grid) / xla (chunked two-dot) / ref (pinned
+    two-contract oracle), and dispatch counts name the attn op-class."""
+    assert set(lowering.backends_for("attn", Ger.F32GER)) \
+        == {"pallas", "xla", "ref"}
+    q, k, v = _attn_operands(rng)
+    lowering.DISPATCH_COUNTS.clear()
+    outs = _attn_all_backends(q, k, v, dict(ATTN_PLAN_KW, causal=causal))
+    for backend in ("pallas", "xla", "ref"):
+        assert lowering.DISPATCH_COUNTS[
+            (backend, "attn", Ger.F32GER.value)] == 1
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=backend)
+
+
+@pytest.mark.parametrize("kvh", [1, 2, 4])
+def test_attn_gqa_group_sizes_agree(kvh, rng):
+    """GQA head groups: every KV head serves H/KVH query heads through the
+    kernel's BlockSpec index maps — equivalent to the materialized-repeat
+    oracle at every group size."""
+    q, k, v = _attn_operands(rng, kvh=kvh)
+    outs = _attn_all_backends(q, k, v, dict(ATTN_PLAN_KW, causal=True))
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=f"{backend} kvh={kvh}")
+    # and groups really differ from MHA when kvh < h
+    if kvh < 4:
+        q2, k2, v2 = _attn_operands(rng, kvh=4)
+        alt = facility.contract(facility.ATTN, q, k2, v2,
+                                plan=Plan(backend="ref", causal=True,
+                                          **ATTN_PLAN_KW))
+        assert float(jnp.abs(alt - ref).max()) > 1e-3
+
+
+@pytest.mark.parametrize("window,q_offset", [(17, 0), (None, 16), (13, 16)])
+def test_attn_window_and_q_offset_agree(window, q_offset, rng):
+    """Sliding-window and decode-offset predicates (in-kernel pm*-style,
+    grid-bounding on pallas) match across backends."""
+    q, k, v = _attn_operands(rng, sq=32, sk=64)
+    outs = _attn_all_backends(
+        q, k, v, dict(ATTN_PLAN_KW, causal=True, window=window,
+                      q_offset=q_offset))
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=backend)
+
+
+def test_attn_valid_slot_mask_agrees(rng):
+    """The (B, Sk) filled-slot predicate rides as masks=(valid,) and is
+    applied to the streamed score tile on every backend."""
+    q, k, v = _attn_operands(rng)
+    valid = jnp.asarray(rng.random((2, 64)) > 0.3)
+    outs = _attn_all_backends(q, k, v, dict(ATTN_PLAN_KW, causal=True),
+                              masks=(valid,))
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=backend)
+
+
+def test_attn_bf16_with_f32_accumulator(rng):
+    """BF16GER2 attn plans round operands to bf16 but keep the online
+    softmax / O accumulator in f32 (out_dtype=ACC exposes it)."""
+    q, k, v = _attn_operands(rng, dtype=jnp.bfloat16)
+    outs = _attn_all_backends(
+        q, k, v, dict(ger=Ger.BF16GER2, causal=True, block=(32, 32),
+                      out_dtype=lowering.ACC))
+    for backend, got in outs.items():
+        assert got.dtype == jnp.float32, backend
+    ref = np.asarray(outs.pop("ref"), np.float32)
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got, np.float32), ref,
+                                   rtol=3e-2, atol=3e-2, err_msg=backend)
+
+
+def test_attn_fused_residual_epilogue_backends_agree(rng):
+    """The decoder-block residual hookup rides the attn deprime store
+    (epilogue contract) equivalently on all backends, bit-for-bit equal
+    to unfused + epilogue on pallas."""
+    q, k, v = _attn_operands(rng)
+    res = jnp.asarray(rng.normal(size=q.shape), jnp.float32)
+    ep = E.Epilogue(residual=True)
+    outs = _attn_all_backends(
+        q, k, v, dict(ATTN_PLAN_KW, causal=True, epilogue=ep),
+        residual=res)
+    ref = np.asarray(outs.pop("ref"))
+    for backend, got in outs.items():
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4,
+                                   atol=2e-4, err_msg=backend)
+    base = facility.contract(facility.ATTN, q, k, v,
+                             plan=Plan(backend="pallas", causal=True,
+                                       **ATTN_PLAN_KW))
+    fused = facility.contract(facility.ATTN, q, k, v, residual=res,
+                              plan=Plan(backend="pallas", causal=True,
+                                        epilogue=ep, **ATTN_PLAN_KW))
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(base + res))
+
+
+def test_attn_rejects_bad_plans(rng):
+    q, k, v = _attn_operands(rng)
+    with pytest.raises(ValueError, match="three-operand"):
+        facility.contract(facility.ATTN, q, k)
+    with pytest.raises(ValueError, match="attn-spec vocabulary"):
+        facility.contract("mk,kn->mn", jnp.zeros((4, 8), jnp.float32),
+                          jnp.zeros((8, 4), jnp.float32),
+                          jnp.zeros((8, 4), jnp.float32))
+    with pytest.raises(ValueError, match="attn spec only"):
+        facility.contract("mk,kn->mn", jnp.zeros((4, 8), jnp.float32),
+                          jnp.zeros((8, 4), jnp.float32),
+                          plan=Plan(causal=True))
+    with pytest.raises(ValueError, match="float families"):
+        facility.contract(facility.ATTN, q, k, v, plan=Plan(ger=Ger.I8GER4))
+    with pytest.raises(ValueError, match="no accumulator seed"):
+        facility.contract(facility.ATTN, q, k, v,
+                          acc=jnp.zeros_like(q), plan=Plan(causal=True))
+    _, k4, v4 = _attn_operands(rng, kvh=4)
+    with pytest.raises(ValueError, match="multiple of KVH"):
+        facility.contract(facility.ATTN, q, k4[:, :, :3], v4[:, :, :3],
+                          plan=Plan())
+    with pytest.raises(ValueError, match="valid mask"):
+        facility.contract(facility.ATTN, q, k, v,
+                          masks=(jnp.ones(7, bool),))
+
+
+def test_attn_autotune_cache_consulted(tmp_path, monkeypatch, rng):
+    """The attn lowering consults the (bh, sq, sk, d)-keyed (bq, bk)
+    winner on dispatch; the planted block drives the kernel's grid."""
+    from repro.core import autotune
+    import repro.kernels.mma_attention as MA
+    cache = autotune.AutotuneCache(tmp_path / "at.json")
+    monkeypatch.setattr(autotune, "_DEFAULT_CACHE", cache)
+    b, sq, sk, h, d = 1, 64, 64, 2, 32
+    cache.put_raw(autotune.attn_cache_key(Ger.F32GER, b * h, sq, sk, d),
+                  [16, 32], source="traced", score=0.0)
+    assert autotune.lookup_attn(Ger.F32GER, b * h, sq, sk, d) == (16, 32)
+    # a stale winner that no longer divides is ignored
+    cache.put_raw(autotune.attn_cache_key(Ger.F32GER, 9, 9, 9, 9),
+                  [16, 32], source="traced", score=0.0)
+    assert autotune.lookup_attn(Ger.F32GER, 9, 9, 9, 9) is None
+    grids = []
+    real = MA.pl.pallas_call
+
+    def spy(kernel, **kw):
+        grids.append(kw.get("grid_spec").grid)
+        return real(kernel, **kw)
+
+    monkeypatch.setattr(MA.pl, "pallas_call", spy)
+    q, k, v = _attn_operands(rng, b=b, sq=sq, sk=sk, h=h, kvh=h, d=d)
+    got = facility.contract(
+        facility.ATTN, q, k, v,
+        plan=Plan(ger=Ger.F32GER, backend="pallas", causal=True,
+                  out_dtype=jnp.float32))
+    # bq=16, bk=32: live steps = sum_qi cdiv((qi+1)*16, 32) = 1+1+2+2
+    assert grids == [(b, h, 6)], grids
+    want = facility.contract(
+        facility.ATTN, q, k, v,
+        plan=Plan(ger=Ger.F32GER, backend="ref", out_dtype=jnp.float32,
+                  causal=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attn_autotune_search_persists_dividing_winner(tmp_path, rng):
+    from repro.core import autotune
+    cache = autotune.AutotuneCache(tmp_path / "at.json")
+    best = autotune.autotune_attn(Ger.BF16GER2, 4, 96, 96, 32,
+                                  causal=True, cache=cache)
+    assert 96 % best[0] == 0 and 96 % best[1] == 0
+    assert autotune.lookup_attn(Ger.BF16GER2, 4, 96, 96, 32,
+                                cache=cache) == best
+
+
+def test_sdpa_prefill_dispatches_attn_op_class(rng):
+    """layers.sdpa routes prefill (dense positions, static q_offset)
+    through the contract path; ring-buffer decode (kv_positions) keeps
+    the explicit chunked scan."""
+    from repro.models import layers as L
+    q = jnp.asarray(rng.normal(size=(2, 16, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 16, 2, 8)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    out = L.sdpa(q, k, k, causal=True)
+    assert sum(v for key, v in lowering.DISPATCH_COUNTS.items()
+               if key[1] == "attn") == 1, dict(lowering.DISPATCH_COUNTS)
+    assert out.shape == q.shape
+    # ring-buffer decode: kv_positions present -> no attn-op-class dispatch
+    lowering.DISPATCH_COUNTS.clear()
+    kv_pos = jnp.arange(16)[None].repeat(2, 0)
+    out = L.sdpa(q[:, :1], k, k, causal=True,
+                 q_offset=jnp.asarray(3), kv_positions=kv_pos,
+                 valid=kv_pos >= 0)
+    assert not any(key[1] == "attn" for key in lowering.DISPATCH_COUNTS)
+    assert out.shape == (2, 1, 4, 8)
+
+
+def test_sdpa_ragged_sq_keeps_query_chunking(monkeypatch, rng):
+    """Regression: sq % q_chunk != 0 (e.g. 1536 at the default 1024) used
+    to silently fall back to unchunked attention, materializing the full
+    (B, H, Sq, Sk) scores.  Both attn paths now process a ragged tail
+    chunk: live chunks never exceed q_chunk."""
+    from repro.core import lowering as LW
+    from repro.models import layers as L
+    b, sq, sk, h, d = 1, 24, 16, 2, 8
+    monkeypatch.setattr(L, "Q_CHUNK", 16)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+
+    # contract path (xla lowering): spy the shared chunk worker
+    chunks = []
+    real_chunk = LW.attend_chunk
+
+    def spy_chunk(qc, *a, **kw):
+        chunks.append(qc.shape[1])
+        return real_chunk(qc, *a, **kw)
+
+    monkeypatch.setattr(LW, "attend_chunk", spy_chunk)
+    got = L.sdpa(q, k, k, causal=True)
+    assert chunks and max(chunks) <= 16 and sum(chunks) == sq, chunks
+    want = L.sdpa(q, k, k, causal=True, q_chunk=sq)   # one full chunk
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    # legacy ring-buffer path: spy _attend
+    attend_chunks = []
+    real_attend = L._attend
+
+    def spy_attend(qb, *a, **kw):
+        attend_chunks.append(qb.shape[1])
+        return real_attend(qb, *a, **kw)
+
+    monkeypatch.setattr(L, "_attend", spy_attend)
+    kv_pos = jnp.arange(sk)[None].repeat(b, 0)
+    got = L.sdpa(q, k, k, causal=True, kv_positions=kv_pos)
+    assert attend_chunks and max(attend_chunks) <= 16 \
+        and sum(attend_chunks) == sq, attend_chunks
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_path_zeroes_fully_masked_rows(rng):
+    """Regression (review finding): the ring-buffer decode path shares
+    lowering.attend_chunk, so rows with no live KV slot yield exact zeros
+    there too — not the uniform-softmax mean(V) the old layers._attend
+    produced when the sliding window slid past the cached K."""
+    from repro.models import layers as L
+    b, sq, sk, h, d = 1, 64, 64, 1, 16
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+    kv_pos = jnp.arange(sk)[None]
+    with facility.configure(facility.FacilityConfig(
+            ger=Ger.F32GER, out_dtype=jnp.float32)):
+        got = L.sdpa(q, k, k, causal=True, q_offset=jnp.asarray(64),
+                     window=48, kv_positions=kv_pos)
+        # the decode path agrees with the attn op-class at the same shape
+        want = L.sdpa(q, k, k, causal=True, q_offset=64, window=48)
+    # rows with q_pos >= 112 have window (q_pos-47, q_pos] beyond sk=64
+    np.testing.assert_array_equal(np.asarray(got)[0, 48:],
+                                  np.zeros((16, h, d), np.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_shim_routes_through_attn_op_class(rng):
+    """mma_attention.flash_attention is a deprecated shim over
+    contract(facility.ATTN, ...): it warns, dispatches via the attn
+    op-class, and matches the oracle."""
+    from repro.kernels import mma_attention as FA
+    q = jnp.asarray(rng.normal(size=(2, 64, 32)), jnp.float32)
+    lowering.DISPATCH_COUNTS.clear()
+    with pytest.warns(DeprecationWarning, match="facility.contract"):
+        got = FA.flash_attention(q, q, q, causal=True, block_q=32,
+                                 block_k=32, interpret=True)
+    assert lowering.DISPATCH_COUNTS[
+        ("pallas", "attn", Ger.F32GER.value)] == 1
+    want = FA.ref_attention(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_mma_pm_dot_shim_routes_through_gemm_masked(rng):
     """ops.mma_pm_dot is a deprecated shim over contract(..., masks=...):
     it warns, dispatches via gemm.masked, and matches the oracle."""

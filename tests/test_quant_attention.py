@@ -1,5 +1,7 @@
 """Tests for the beyond-paper kernels: flash attention + int8 serving."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +9,13 @@ import pytest
 
 from repro.core import quant
 from repro.kernels import mma_attention as FA
+
+
+def _flash(q, k, v, **kw):
+    """The deprecated shim, warning-silenced (kernel behavior under test)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return FA.flash_attention(q, k, v, **kw)
 
 
 @pytest.mark.parametrize("bh,s,d,causal,bq,bk", [
@@ -19,8 +28,8 @@ def test_flash_attention_matches_ref(bh, s, d, causal, bq, bk, rng):
     q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
-    got = FA.flash_attention(q, k, v, causal=causal, block_q=bq,
-                             block_k=bk, interpret=True)
+    got = _flash(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                 interpret=True)
     want = FA.ref_attention(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
@@ -30,11 +39,153 @@ def test_flash_attention_bf16(rng):
     q = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.bfloat16)
     k = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.bfloat16)
     v = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.bfloat16)
-    got = FA.flash_attention(q, k, v, interpret=True)
+    got = _flash(q, k, v, interpret=True)
     want = FA.ref_attention(q, k, v)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------------------
+# Bounded causal grid (the flattened (qi, ki) schedule)
+# ----------------------------------------------------------------------
+
+def test_attn_k_bounds_and_live_steps():
+    """The grid plan's pure math: causal bounds above, window below,
+    q_offset shifts the diagonal, and the schedule is never empty."""
+    # causal self-attention: block qi sees ki <= diagonal
+    assert FA.attn_k_bounds(0, 4, bq=64, bk=64, causal=True) == (0, 1)
+    assert FA.attn_k_bounds(3, 4, bq=64, bk=64, causal=True) == (0, 4)
+    # ~half the rectangular grid on causal prefill
+    assert FA.attn_live_steps(256, 256, 64, 64, causal=True) == 10  # vs 16
+    assert FA.attn_live_steps(256, 256, 64, 64, causal=False) == 16
+    # decode continuation: q_offset moves the diagonal right
+    assert FA.attn_k_bounds(0, 4, bq=64, bk=64, causal=True,
+                            q_offset=128) == (0, 3)
+    # sliding window drops fully-below-window leading blocks
+    assert FA.attn_k_bounds(3, 4, bq=64, bk=64, causal=True,
+                            window=64) == (2, 4)
+    # a window entirely beyond the cached K still schedules one (masked)
+    # step so the output block deprimes (to zeros, via the guard)
+    lo, hi = FA.attn_k_bounds(0, 1, bq=64, bk=64, causal=False,
+                              q_offset=1024, window=8)
+    assert (lo, hi) == (0, 1)
+    # the flattened plan agrees with the per-block bounds
+    plan = FA.attn_grid_plan(256, 256, 64, 64, causal=True)
+    assert plan.shape == (4, 10)
+    assert plan[2].sum() == 4 and plan[3].sum() == 4  # one prime/store per qi
+
+
+def test_causal_grid_is_bounded_and_matches_full(rng):
+    """The dispatch-count check: causal prefill issues exactly the live
+    (qi, ki) steps — ~half the rectangular grid — and the bounded
+    schedule is bit-for-bit the full-grid kernel."""
+    import repro.kernels.mma_attention as MA
+    from jax.experimental import pallas as pl
+    sq = sk = 256
+    q = jnp.asarray(rng.normal(size=(1, sq, 2, 32)), jnp.float32)
+    grids = []
+    real = pl.pallas_call
+
+    def spy(kernel, **kw):
+        grids.append(kw.get("grid_spec").grid)
+        return real(kernel, **kw)
+
+    MA.pl.pallas_call = spy
+    try:
+        bounded = FA.mma_flash_attention(q, q, q, causal=True, block_q=64,
+                                         block_k=64, interpret=True)
+        full = FA.mma_flash_attention(q, q, q, causal=True, block_q=64,
+                                      block_k=64, bound_grid=False,
+                                      interpret=True)
+    finally:
+        MA.pl.pallas_call = real
+    n_live = FA.attn_live_steps(sq, sk, 64, 64, causal=True)
+    assert grids == [(1, 2, n_live), (1, 2, 16)], grids
+    assert n_live == 10 < 16
+    np.testing.assert_array_equal(np.asarray(bounded), np.asarray(full))
+
+
+def test_window_bounds_grid_below(rng):
+    """A sliding window also shrinks the schedule from below, and the
+    bounded result matches the full grid and the oracle."""
+    sq = sk = 256
+    q = jnp.asarray(rng.normal(size=(1, sq, 1, 32)), jnp.float32)
+    n_win = FA.attn_live_steps(sq, sk, 64, 64, causal=True, window=64)
+    n_causal = FA.attn_live_steps(sq, sk, 64, 64, causal=True)
+    assert n_win < n_causal
+    got = FA.mma_flash_attention(q, q, q, causal=True, window=64,
+                                 block_q=64, block_k=64, interpret=True)
+    full = FA.mma_flash_attention(q, q, q, causal=True, window=64,
+                                  block_q=64, block_k=64,
+                                  bound_grid=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+    want = FA.ref_attention(q, q, q, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_q_offset_valid_kernel_matches_ref(rng):
+    """The generalized kernel surface at once: GQA groups, a decode
+    offset, and a ring-buffer valid mask."""
+    b, sq, sk, h, kvh, d = 2, 64, 128, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, kvh, d)), jnp.float32)
+    valid = jnp.asarray(rng.random((b, sk)) > 0.2)
+    got = FA.mma_flash_attention(q, k, v, causal=True, q_offset=64,
+                                 valid=valid, block_q=32, block_k=32,
+                                 interpret=True)
+    want = FA.ref_attention(q, k, v, causal=True, q_offset=64, valid=valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# Masked-block hazard (exp(NEG_INF - NEG_INF) == 1)
+# ----------------------------------------------------------------------
+
+def test_masked_block_guard_leading_invalid_block(rng):
+    """Regression for the fully-masked-block hazard: when the FIRST block
+    a query row sees is fully masked (here: the causal bound restricts
+    row block 0 to KV block 0, whose slots are all invalid), the
+    unguarded online softmax computes p = exp(NEG_INF - NEG_INF) = 1 and
+    silently accumulates mean(V).  The guarded kernel emits exact zeros.
+    (Verified to fail with the ``m_new == NEG_INF`` gate reverted.)"""
+    d = 32
+    q = jnp.asarray(rng.normal(size=(1, 64, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 1, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 1, d)), jnp.float32)
+    valid = jnp.zeros((1, 128), bool).at[:, 64:].set(True)
+    got = FA.mma_flash_attention(q, k, v, causal=True, valid=valid,
+                                 block_q=64, block_k=64, interpret=True)
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.zeros_like(np.asarray(got)))
+    want = FA.ref_attention(q, k, v, causal=True, valid=valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_masked_block_guard_q_offset_window_rows(rng):
+    """The q_offset flavour of the hazard: a decode continuation whose
+    sliding window has slid past the cached K leaves trailing query rows
+    with no live slot in their (single, leading) block — live the moment
+    q_offset/window make a leading block fully masked."""
+    d = 16
+    q = jnp.asarray(rng.normal(size=(1, 64, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 1, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 1, d)), jnp.float32)
+    got = FA.mma_flash_attention(q, k, v, causal=True, q_offset=64,
+                                 window=48, block_q=64, block_k=64,
+                                 interpret=True)
+    # rows with q_pos >= 112 have window (q_pos-47, q_pos] beyond sk=64
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_array_equal(np.asarray(got)[0, 48:],
+                                  np.zeros((16, 1, d), np.float32))
+    want = FA.ref_attention(q, k, v, causal=True, q_offset=64, window=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_flash_vmem_footprint_is_block_bounded():
