@@ -19,6 +19,8 @@ Paper mapping:
     power_proxy  -> Figure 12 (operand traffic per FLOP — the power story)
     ger_kinds    -> Tables I/II (every rank-k update family vs oracle)
     step_bench   -> framework-level train/decode step times
+    serving      -> fault-tolerant serving loop: live-slot tokens/s,
+                    guarded vs unguarded dispatch
 """
 
 import argparse
@@ -26,14 +28,14 @@ import json
 import sys
 
 BENCH_NAMES = ("dgemm", "hpl_like", "sconv", "dft", "attention",
-               "power_proxy", "ger_kinds", "step_bench")
+               "power_proxy", "ger_kinds", "step_bench", "serving")
 
 
 def _load_benchmarks():
     """Import the benchmark modules *before* any CSV output so an import
     error exits nonzero without emitting a partial header."""
     from benchmarks import attention, dft, dgemm, ger_kinds, hpl_like, \
-        power_proxy, sconv, step_bench
+        power_proxy, sconv, serving, step_bench
     return {
         "dgemm": dgemm.run,
         "hpl_like": hpl_like.run,
@@ -43,6 +45,7 @@ def _load_benchmarks():
         "power_proxy": power_proxy.run,
         "ger_kinds": ger_kinds.run,
         "step_bench": step_bench.run,
+        "serving": serving.run,
     }
 
 

@@ -1,0 +1,44 @@
+"""Serving-loop benchmark: live-slot throughput of the fault-tolerant
+runtime (paged-KV admission, real prefill, honest token accounting).
+
+Rows:
+    serve_decode   — plain run: live decode tokens/s, page high-water
+    serve_guarded  — same run with guards on (the detector-sync cost the
+                     guards=False default avoids)
+"""
+
+import dataclasses
+
+import jax
+
+from benchmarks import common
+from repro.configs import get
+from repro.configs.base import reduced
+from repro.core import facility
+from repro.launch.serve import serve_loop
+from repro.models import model as M
+
+ARCH = "mamba2-130m"
+BATCH, PROMPT, GEN, REQS = 4, 16, 12, 8
+
+
+def run():
+    cfg = reduced(get(ARCH))
+    params = M.init_params(cfg, jax.random.key(0))
+
+    def one(guards):
+        with facility.configure(dataclasses.replace(
+                facility.current(), guards=guards)):
+            return serve_loop(cfg, params, batch=BATCH, prompt_len=PROMPT,
+                              gen_len=GEN, n_requests=REQS, guards=guards)
+
+    for name, guards in (("serve_decode", False), ("serve_guarded", True)):
+        out = one(guards)
+        us = out["wall_s"] / max(out["steps"], 1) * 1e6
+        common.emit(
+            name, us,
+            f"tok_s={out['tokens_per_s']:.1f};"
+            f"decode_tokens={out['decode_tokens']};"
+            f"prefill_tokens={out['prefill_tokens']};"
+            f"completed={out['completed']};"
+            f"pages_hw={out['pages']['high_water_pages']}")

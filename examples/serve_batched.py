@@ -2,8 +2,9 @@
 
     PYTHONPATH=src python examples/serve_batched.py --arch glm4-9b
 
-Serves a reduced-config model: prefill-free slot admission, ring-buffer KV
-caches (bounded for SWA archs), argmax decoding.
+Serves a reduced-config model through the fault-tolerant runtime: paged-KV
+admission control (requests queue when pages run out), real prompt
+prefill at admission, argmax decoding, live-slot token accounting.
 """
 
 import argparse
@@ -30,8 +31,12 @@ def main():
                      gen_len=args.gen, n_requests=args.requests)
     print(f"{args.arch}: served {out['completed']} requests in "
           f"{out['steps']} decode steps "
-          f"({out['tokens_per_s']:.0f} slot-tokens/s)")
+          f"({out['tokens_per_s']:.0f} live tok/s, "
+          f"{out['prefill_tokens']} prefill tokens, "
+          f"pages hw={out['pages']['high_water_pages']}"
+          f"/{out['pages']['total_pages']})")
     assert out["completed"] == args.requests
+    assert out["pages"]["allocs"] == out["pages"]["frees"]
 
 
 if __name__ == "__main__":

@@ -57,6 +57,15 @@ echo "== tier-1 tests =="
 # errors for in-repo (repro.*) callers.
 python -m pytest -x -q
 
+echo "== fault-matrix smoke (<180s) =="
+# The serving loop under a seeded fault schedule — one scenario per fault
+# kind (kernel raise, NaN poison, page exhaustion, latency spike, step
+# crash, transient alloc failure).  Each scenario must serve every
+# request exactly once (no drops, no duplicates) with the KV page pool
+# fully reclaimed; the runner exits nonzero otherwise.
+timeout 180 python -m repro.launch.serve --arch mamba2-130m \
+    --batch 2 --prompt-len 8 --gen 6 --requests 4 --fault-matrix
+
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     echo "== dgemm benchmark smoke (<60s) =="
     timeout 60 python -m benchmarks.run --only dgemm --json BENCH_dgemm.json

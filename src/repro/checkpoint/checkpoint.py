@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import faults as _faults
+
 # npz can't store ml_dtypes (bfloat16, fp8); store a bit-view + dtype name.
 _VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
             "float8_e5m2": np.uint8}
@@ -114,6 +116,15 @@ class Checkpointer:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # checkpoint.save injection point: a `raise` here is a crash after
+        # the tmp dir exists but before the rename; a `torn` fault
+        # truncates arrays.npz mid-write and stops.  Either way the final
+        # directory never appears, so latest_step() still returns the
+        # previous complete step — the atomicity the restart path relies on.
+        fault = _faults.maybe_inject(_faults.CHECKPOINT_SAVE, step=step)
+        if fault is not None and fault.kind == _faults.TORN:
+            _faults.tear(os.path.join(tmp, "arrays.npz"))
+            return
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)

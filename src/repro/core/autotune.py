@@ -47,6 +47,13 @@ import numpy as np
 
 from repro.core import precision, tiling
 from repro.roofline import analysis as _roofline
+from repro.runtime import faults as _faults
+
+# What a candidate config may legitimately die with while being validated
+# (fails to lower, unsupported shape, interpret-mode runtime error) — the
+# same narrow set the guarded-dispatch ladder demotes on.  Anything else
+# (AttributeError, ImportError, ...) is a bug and must surface.
+from repro.core.lowering import LOWERING_ERRORS
 
 DEFAULT_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = pathlib.Path(
@@ -79,11 +86,25 @@ class AutotuneCache:
         self._lock = threading.Lock()
 
     def _load(self) -> dict[str, dict]:
+        """Lazy read.  A missing, truncated, torn, or otherwise corrupt
+        cache file degrades to an empty store — dispatch falls back to the
+        heuristic — and HEALS on the next ``put_raw`` (which rewrites the
+        whole store atomically).  OSError covers unreadable files,
+        ValueError covers garbage JSON (json.JSONDecodeError is a
+        subclass) and non-dict blobs; nothing broader is swallowed."""
         if self._entries is None:
             try:
+                fault = _faults.fire(_faults.AUTOTUNE_LOAD)
+                if fault is not None and fault.kind == _faults.RAISE:
+                    raise OSError("injected autotune.load failure")
                 blob = json.loads(self.path.read_text())
+                if not isinstance(blob, dict):
+                    raise ValueError(f"cache blob is {type(blob).__name__}")
                 if blob.get("version") == CACHE_VERSION:
-                    self._entries = dict(blob.get("entries", {}))
+                    entries = blob.get("entries", {})
+                    if not isinstance(entries, dict):
+                        raise ValueError("cache entries is not a mapping")
+                    self._entries = dict(entries)
                 else:
                     self._entries = {}
             except (OSError, ValueError):
@@ -108,19 +129,37 @@ class AutotuneCache:
 
     def put_raw(self, key: str, block: list[int], *, source: str,
                 score: float) -> None:
+        """Record a winner and persist the store ATOMICALLY: full blob to
+        a same-directory pid-unique temp file, then ``os.replace`` — a
+        reader (or a crash, simulated by the ``autotune.save`` torn-write
+        fault) can never observe a half-written cache, and a corrupt
+        on-disk file is healed by the first save after it."""
         with self._lock:
             entries = self._load()
             entries[key] = {"block": list(block),
                             "source": source, "score": score}
+            tmp = self.path.with_name(
+                f"{self.path.name}.{os.getpid()}.tmp")
             try:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
-                tmp = self.path.with_suffix(".tmp")
                 tmp.write_text(json.dumps(
                     {"version": CACHE_VERSION, "entries": entries},
                     indent=1, sort_keys=True))
-                tmp.replace(self.path)
+                fault = _faults.fire(_faults.AUTOTUNE_SAVE)
+                if fault is not None and fault.kind == _faults.TORN:
+                    _faults.tear(tmp)      # crash mid-write: never publish
+                    tmp.unlink(missing_ok=True)
+                    return
+                if fault is not None and fault.kind == _faults.RAISE:
+                    raise OSError("injected autotune.save failure")
+                os.replace(tmp, self.path)
             except OSError:
-                pass  # read-only FS: keep the in-memory winner
+                # read-only FS / injected save failure: keep the
+                # in-memory winner, leave no temp litter behind
+                try:
+                    tmp.unlink()
+                except OSError:
+                    pass
 
     def __len__(self) -> int:
         return len(self._load())
@@ -279,7 +318,7 @@ def _validate_interpret(m, n, k, kind, cfg) -> bool:
         return bool(jnp.isfinite(
             out.astype(jnp.float32)).all()) if not jnp.issubdtype(
                 out.dtype, jnp.integer) else True
-    except Exception:
+    except LOWERING_ERRORS:
         return False
 
 
@@ -466,7 +505,7 @@ def autotune_attn(kind: precision.Ger, bh: int, sq: int, sk: int, d: int,
                 if bool(jnp.isfinite(out.astype(jnp.float32)).all()):
                     best, score = (bq, bk), prior((bq, bk))
                     break
-            except Exception:
+            except LOWERING_ERRORS:
                 continue
         if best is None:
             best = ranked[0] if ranked else (sq, sk)

@@ -70,6 +70,12 @@ class FacilityConfig:
     # dot_general.
     use_pallas: bool = False
     interpret: bool = True           # Pallas interpret mode (CPU container)
+    # Guarded dispatch (DESIGN.md section 8): wrap contract outputs with a
+    # NaN/Inf detector and demote lowering failures down the
+    # pallas -> xla -> ref ladder (per-(op-class, shape) quarantine).  Off
+    # by default: the unguarded dispatch tail is bitwise-identical and
+    # pays no detector sync.
+    guards: bool = False
 
 
 _CONFIG = contextvars.ContextVar("mma_facility", default=FacilityConfig())

@@ -60,6 +60,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import logging
 import warnings
 
 import jax
@@ -67,6 +68,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import precision
+from repro.runtime import faults as _faults
 
 Ger = precision.Ger
 
@@ -1381,6 +1383,137 @@ _REGISTRY[("ref", "einsum", None, None)] = _lower_xla_einsum
 
 
 # ----------------------------------------------------------------------
+# Guarded dispatch: the degradation ladder (DESIGN.md section 8)
+# ----------------------------------------------------------------------
+# Opt-in via FacilityConfig(guards=True): contract outputs pass a NaN/Inf
+# detector and lowering failures (compile error, unsupported shape,
+# injected fault) demote down the ladder pallas -> xla -> ref — the MX
+# argument (arXiv:2401.04012) that an aggressive fast path is safe to ship
+# exactly when a cheaper always-correct lowering backs it.  Each demotion
+# is logged and quarantined per (op-class, ger, spec, shapes) so a
+# poisoned kernel config is demoted ONCE, not re-tried on every call.
+# With guards off the dispatch tail is byte-identical to the unguarded
+# facility (asserted by tests/test_guards.py).
+
+LADDER = ("pallas", "xla", "ref")
+
+# Exception classes a broken lowering legitimately raises (narrow on
+# purpose: programming errors like AttributeError must surface, not
+# demote).  InjectedFault is the fault-harness stand-in for all of them.
+_JAX_ERRORS = tuple(
+    e for e in (getattr(jax.errors, "JaxRuntimeError", None),)
+    if e is not None)
+LOWERING_ERRORS = (ValueError, TypeError, NotImplementedError,
+                   ArithmeticError) + _JAX_ERRORS
+
+_QUARANTINE: dict[tuple, str] = {}     # guard key -> demoted start rung
+GUARD_EVENTS: list[dict] = []          # demotion log (tests/CI assert)
+_guard_log = logging.getLogger("repro.facility.guards")
+
+
+def guard_key(op_class: str, op: "Op") -> tuple:
+    """Quarantine granularity: one entry per (op-class, ger, spec, operand
+    shapes) — the same granularity the autotune cache keys a kernel config
+    by, so "this kernel config is poisoned" maps one-to-one."""
+    return (op_class, op.ger.value, op.spec, tuple(jnp.shape(op.x)),
+            tuple(jnp.shape(op.y)))
+
+
+def quarantine_state() -> dict:
+    return dict(_QUARANTINE)
+
+
+def clear_guard_state() -> None:
+    _QUARANTINE.clear()
+    GUARD_EVENTS.clear()
+
+
+def _output_finite(out) -> bool:
+    """The NaN/Inf detector.  Tracers (a contract call inside someone
+    else's jit) cannot be value-inspected — the exception ladder still
+    protects them, value poisoning is caught at the caller's sync point
+    (e.g. the serving loop's per-step logits check)."""
+    if isinstance(out, jax.core.Tracer):
+        return True
+    dt = out.dtype
+    if not jnp.issubdtype(dt, jnp.inexact):
+        return True
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return bool(jnp.isfinite(jnp.real(out)).all()
+                    & jnp.isfinite(jnp.imag(out)).all())
+    return bool(jnp.isfinite(out).all())
+
+
+def _record_demotion(key, frm, to, reason, op_class, spec):
+    ev = {"op_class": op_class, "spec": spec, "from": frm, "to": to,
+          "reason": reason, "key": key}
+    GUARD_EVENTS.append(ev)
+    _guard_log.warning("guard: %s %r demoted %s -> %s (%s)",
+                       op_class, spec, frm, to, reason)
+
+
+def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
+                      fused: bool):
+    """Walk the ladder from ``backend`` (or its quarantined demotion)
+    until a rung returns a clean output.
+
+    Demotion rules:
+      * a rung that *raises* (LOWERING_ERRORS / InjectedFault) is
+        quarantined immediately — the failure is structural, retrying it
+        per call buys nothing;
+      * a rung whose output is non-finite is demoted *pending*: the
+        quarantine commits only if a later rung produces finite output
+        (otherwise the NaN is input-borne and no rung is at fault);
+      * the final rung's non-finite output is returned as-is, without
+        quarantine — ref is ground truth, garbage-in stays garbage-out.
+    """
+    key = guard_key(op_class, op)
+    start = _QUARANTINE.get(key, backend)
+    if start not in LADDER:
+        start = backend
+    attempts = [r for r in LADDER[LADDER.index(start):]
+                if lookup(r, op_class, ger, fused) is not None]
+    if not attempts:
+        raise NotImplementedError(
+            f"no lowering registered on any ladder rung for "
+            f"({op_class!r}, {ger}, fused={fused})")
+    last_exc = None
+    pending_nonfinite = False
+    for i, rung in enumerate(attempts):
+        fn = lookup(rung, op_class, ger, fused)
+        sub = op if rung == op.backend \
+            else dataclasses.replace(op, backend=rung)
+        nxt = attempts[i + 1] if i + 1 < len(attempts) else None
+        try:
+            fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
+            out = fn(sub)
+            if fault is not None and fault.kind == _faults.NAN:
+                out = _faults.poison(out)
+        except (_faults.InjectedFault,) + LOWERING_ERRORS as e:
+            last_exc = e
+            if nxt is None:
+                raise
+            _record_demotion(key, rung, nxt, f"{type(e).__name__}: {e}",
+                             op_class, op.spec)
+            _QUARANTINE[key] = nxt
+            continue
+        if _output_finite(out):
+            if rung != backend and pending_nonfinite:
+                # non-finite demotions commit only on a clean lower rung
+                _QUARANTINE[key] = rung
+            DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
+            return out
+        if nxt is None:
+            # ref itself is non-finite: input-borne NaN, nobody's fault
+            DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
+            return out
+        pending_nonfinite = True
+        _record_demotion(key, rung, nxt, "non-finite output",
+                         op_class, op.spec)
+    raise last_exc  # pragma: no cover — loop always returns or raises
+
+
+# ----------------------------------------------------------------------
 # The driver
 # ----------------------------------------------------------------------
 
@@ -1589,8 +1722,18 @@ def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
             stride=stride, padding=plan.padding, masks=masks,
             z=z, valid=valid, causal=plan.causal, window=plan.window,
             q_offset=plan.q_offset, q_chunk=plan.q_chunk)
-    DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
-    out = fn(op)
+    if getattr(cfg, "guards", False):
+        out = _guarded_dispatch(op, op_class, backend, ger,
+                                not ep.is_identity)
+    else:
+        # The unguarded fast path: with no fault plan installed this is
+        # ONE contextvar read away from `fn(op)` — bitwise-identical
+        # output (tests/test_guards.py::test_guards_off_bitwise_unchanged).
+        DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
+        fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
+        out = fn(op)
+        if fault is not None and fault.kind == _faults.NAN:
+            out = _faults.poison(out)
     if dequant is not None:
         out = dequant.apply(out)
         out = out.astype(out_dtype) if out_dtype is not None else out

@@ -1,19 +1,50 @@
-"""Batched serving driver: continuous-batching-style decode loop.
+"""Fault-tolerant batched serving runtime (DESIGN.md section 8).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
         --reduced --batch 4 --prompt-len 32 --gen 16
 
-Implements the serving shape of the dry-run for real (reduced configs on
-CPU): prefill a batch of prompts, then step the batch through serve_step
-with a KV/state cache, replacing finished sequences from a request queue
-(continuous batching at step granularity — slot-level admission, the
-vLLM-style policy that matters for utilization).
+Continuous batching at step granularity, rebuilt around three runtime
+pieces the original loop lacked:
+
+  * **Paged-KV admission control** (:class:`repro.runtime.kv_pages.PagePool`):
+    a request reserves its worst-case footprint
+    (``ceil((prompt + gen) / page_size)`` pages) at admission.  When the
+    pool cannot cover it the request *queues* instead of OOMing; requests
+    whose footprint exceeds the whole pool are *rejected* up front.  Pages
+    are reclaimed exactly once (completion OR preemption — the pool's
+    ledger raises on any double-free) and every run ends with
+    ``assert_quiescent()``.
+  * **Deadlines -> preempt -> requeue**: per-request deadlines in loop
+    ticks (the loop's deterministic clock).  A slot that ages past its
+    deadline is preempted — pages freed, slot cleared — and requeued with
+    exponential backoff; after ``max_retries`` requeues the request is
+    *failed* (counted, never silently dropped).
+  * **Real prefill**: admission runs the prompt through a jitted
+    ``batch=1`` prefill; the first generated token is the argmax of the
+    prefill logits, and for ssm-kind archs (per-slot ``ssm``/``conv``
+    state, exactness proven by tests/test_prefill_handoff.py) the prefill
+    state is scattered into the admitted slot of the batched decode cache.
+    Dense/hybrid ring caches share ``pos``/``cur`` across slots, so their
+    per-slot handoff is approximate — the prefill still runs (logits seed
+    the slot) but the state scatter is skipped; see DESIGN.md section 8.
+
+Accounting is honest: ``tokens_per_s`` counts *live-slot decode tokens*
+only (idle slots and faulted ticks contribute nothing) and prefill tokens
+are reported separately.
+
+Fault tolerance is testable end-to-end: the loop consults the
+``serve.step`` injection point every tick (raise = the step crashed, no
+tokens; latency = a straggler tick; nan = poisoned logits the NaN guard
+must catch and discard), and :func:`run_fault_matrix` drives one seeded
+scenario per fault kind, asserting every request is served exactly once
+and the page ledger drains.
 """
 
 from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import time
 
 import jax
@@ -22,61 +53,323 @@ import numpy as np
 
 from repro.configs import get as get_arch, ARCHS
 from repro.configs.base import reduced as reduce_cfg
+from repro.core import facility, lowering
 from repro.models import model as M
+from repro.runtime import faults as _faults
+from repro.runtime.kv_pages import PagePool, PagesExhausted
 from repro.train import steps as S
 
 
-class RequestQueue:
-    """Synthetic request source with per-slot bookkeeping."""
+@dataclasses.dataclass
+class Request:
+    """One serving request and its lifecycle bookkeeping."""
 
-    def __init__(self, cfg, n_requests: int, gen_len: int, seed=0):
-        rng = np.random.default_rng(seed)
-        self.requests = collections.deque(
-            (i, int(rng.integers(gen_len // 2, gen_len + 1)))
-            for i in range(n_requests))
-        self.done: list[tuple[int, int]] = []
+    rid: int
+    prompt: np.ndarray          # (1, prompt_len) int32
+    gen_len: int
+    submit_step: int = 0
+    max_retries: int = 2
+    # mutable lifecycle state
+    retries: int = 0
+    generated: int = 0
+    admit_step: int = -1
+    done_step: int = -1
 
-    def next(self):
-        return self.requests.popleft() if self.requests else None
+    @property
+    def tokens_needed(self) -> int:
+        return self.prompt.shape[1] + self.gen_len
+
+
+class ServeError(RuntimeError):
+    """The serving loop violated its own exactly-once contract."""
+
+
+def _make_requests(cfg, n_requests, prompt_len, gen_len, seed, max_retries):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, (1, max(1, prompt_len)),
+                              dtype=np.int32)
+        g = int(rng.integers(max(1, gen_len // 2), gen_len + 1))
+        reqs.append(Request(rid=i, prompt=prompt, gen_len=g,
+                            max_retries=max_retries))
+    return reqs
+
+
+def _scatter_prefill(cache, pre, slot, cfg):
+    """Scatter a batch=1 prefill cache into ``slot`` of the batched decode
+    cache.  Exact for ssm-kind archs (fully per-slot state); other kinds
+    keep their cold cache (shared ring `pos`/`cur` makes a per-slot
+    scatter unsound — documented limitation)."""
+    if "ssm" in pre and "ssm" in cache and "k" not in cache:
+        cache = dict(cache)
+        cache["ssm"] = cache["ssm"].at[:, slot].set(pre["ssm"][:, 0])
+        cache["conv"] = cache["conv"].at[:, slot].set(
+            pre["conv"][:, 0].astype(cache["conv"].dtype))
+    return cache
 
 
 def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
-               n_requests: int, seed: int = 0):
-    serve_step = jax.jit(S.make_serve_step(cfg))
-    queue = RequestQueue(cfg, n_requests, gen_len, seed)
+               n_requests: int, seed: int = 0,
+               page_size: int = 16, total_pages: int | None = None,
+               deadline_steps: int | None = None, max_retries: int = 2,
+               backoff_steps: int = 2, guards: bool | None = None,
+               max_steps: int | None = None) -> dict:
+    """Serve ``n_requests`` synthetic prompts through a ``batch``-slot
+    continuous-batching decode loop.  Returns a stats dict (superset of
+    the legacy keys ``steps``/``completed``/``tokens_per_s``/``wall_s``).
 
-    cache = M.init_cache(cfg, batch=batch, seq_len=max(prompt_len * 4,
-                                                       gen_len * 2))
-    # Slot state: request id, tokens remaining (-1 = idle).
-    slot_req = [-1] * batch
-    slot_left = [0] * batch
+    Every request ends in exactly one of ``completed`` / ``rejected`` /
+    ``failed``; duplicates raise :class:`ServeError` and the page ledger
+    is proven quiescent before returning.
+    """
+    if guards is None:
+        guards = facility.current().guards
+    serve_step = jax.jit(S.make_serve_step(cfg))
+    prefill_step = jax.jit(S.make_prefill_step(cfg))
+
+    # Pool sized so the default run never queues: full footprint x batch.
+    worst = max(1, -(-(prompt_len + gen_len) // page_size))
+    if total_pages is None:
+        total_pages = worst * batch
+    pool = PagePool(total_pages, page_size)
+
+    requests = _make_requests(cfg, n_requests, prompt_len, gen_len, seed,
+                              max_retries)
+    queue = collections.deque(requests)
+    waiting: list[tuple[int, Request]] = []   # (eligible_at_step, request)
+
+    cache = M.init_cache(cfg, batch=batch,
+                         seq_len=max(prompt_len * 4, gen_len * 2, 8))
+    slot_req: list[Request | None] = [None] * batch
+    slot_age = [0] * batch
     tokens = jnp.zeros((batch, 1), jnp.int32)
+
+    done_counts: collections.Counter = collections.Counter()
+    completed: list[Request] = []
+    rejected: list[Request] = []
+    failed: list[Request] = []
     steps = 0
-    completed = 0
+    decode_tokens = 0
+    prefill_tokens = 0
+    preemptions = 0
+    requeues = 0
+    step_faults = 0
+    nan_steps = 0
+    alloc_faults = 0
+    if max_steps is None:
+        max_steps = (n_requests * (gen_len + prompt_len) * (max_retries + 2)
+                     + 200)
     t0 = time.time()
-    while completed < n_requests:
-        # admit new requests into idle slots (continuous batching)
+
+    def finish(req: Request, bucket: list, step: int):
+        done_counts[req.rid] += 1
+        if done_counts[req.rid] > 1:
+            raise ServeError(f"request {req.rid} finished twice")
+        req.done_step = step
+        bucket.append(req)
+
+    def outstanding() -> bool:
+        return bool(queue or waiting or any(r is not None for r in slot_req))
+
+    while outstanding():
+        if steps > max_steps:
+            raise ServeError(f"serve loop did not converge in {max_steps} "
+                             f"steps ({len(completed)}/{n_requests} done)")
+        # ---- release backoff waiters whose turn has come ----
+        still = []
+        for at, req in waiting:
+            if at <= steps:
+                queue.append(req)
+            else:
+                still.append((at, req))
+        waiting = still
+        # ---- admission: fill idle slots from the queue ----
         for s in range(batch):
-            if slot_left[s] == 0:
-                if slot_req[s] >= 0:
-                    queue.done.append((slot_req[s], steps))
-                    completed += 1
-                    slot_req[s] = -1
-                nxt = queue.next()
-                if nxt is not None:
-                    slot_req[s], slot_left[s] = nxt
-        if all(r < 0 for r in slot_req) and completed >= n_requests:
-            break
-        tokens, logits, cache = serve_step(params, cache, tokens)
+            if slot_req[s] is not None or not queue:
+                continue
+            req = queue[0]
+            if not pool.fits(req.tokens_needed):
+                queue.popleft()
+                finish(req, rejected, steps)
+                continue
+            try:
+                pool.alloc(req.rid, req.tokens_needed)
+            except PagesExhausted:
+                break                      # FIFO: wait for reclaims
+            except _faults.InjectedFault:
+                # transient allocator failure: requeue to the tail with
+                # backoff instead of crashing the loop
+                queue.popleft()
+                alloc_faults += 1
+                requeues += 1
+                waiting.append((steps + backoff_steps, req))
+                continue
+            queue.popleft()
+            logits_last, pre = prefill_step(
+                params, {"tokens": jnp.asarray(req.prompt)})
+            prefill_tokens += req.prompt.shape[1]
+            cache = _scatter_prefill(cache, pre, s, cfg)
+            first = jnp.argmax(logits_last[0]).astype(jnp.int32)
+            tokens = tokens.at[s, 0].set(first)
+            req.generated = 1              # prefill emitted the first token
+            req.admit_step = steps
+            slot_req[s] = req
+            slot_age[s] = 0
+            decode_tokens += 1
+        # a request whose prefill already satisfied gen_len completes
+        # without ever taking a decode tick
         for s in range(batch):
-            if slot_req[s] >= 0:
-                slot_left[s] -= 1
-        steps += 1
-        if steps > n_requests * gen_len + 100:
-            raise RuntimeError("serve loop did not converge")
-    dt = time.time() - t0
-    return {"steps": steps, "completed": completed,
-            "tokens_per_s": steps * batch / dt, "wall_s": dt}
+            req = slot_req[s]
+            if req is not None and req.generated >= req.gen_len:
+                pool.free(req.rid)
+                finish(req, completed, steps)
+                slot_req[s] = None
+        active = [s for s in range(batch) if slot_req[s] is not None]
+        if active:
+            # ---- one decode tick, under the serve.step fault point ----
+            fault = None
+            try:
+                fault = _faults.maybe_inject(_faults.SERVE_STEP, step=steps)
+            except _faults.InjectedFault:
+                # the step crashed: no tokens this tick; slots still age
+                # so deadlines can fire
+                step_faults += 1
+                steps += 1
+                for s in active:
+                    slot_age[s] += 1
+            else:
+                nxt, logits, new_cache = serve_step(params, cache, tokens)
+                if fault is not None and fault.kind == _faults.NAN:
+                    logits = _faults.poison(logits)
+                step_ok = True
+                if guards:
+                    rows = jnp.asarray(logits)[jnp.asarray(active)]
+                    if not bool(jnp.isfinite(rows).all()):
+                        # poisoned output: discard the tick (no tokens
+                        # emitted, previous sampler state kept)
+                        step_ok = False
+                        nan_steps += 1
+                if step_ok:
+                    cache = new_cache
+                    tokens = nxt
+                    for s in active:
+                        req = slot_req[s]
+                        req.generated += 1
+                        decode_tokens += 1
+                steps += 1
+                for s in active:
+                    slot_age[s] += 1
+        else:
+            # nothing decodable this tick (everyone in backoff or blocked
+            # on pages) — the clock must still advance so waiters drain
+            steps += 1
+        # ---- retire / preempt ----
+        for s in range(batch):
+            req = slot_req[s]
+            if req is None:
+                continue
+            if req.generated >= req.gen_len:
+                pool.free(req.rid)
+                finish(req, completed, steps)
+                slot_req[s] = None
+            elif deadline_steps is not None and slot_age[s] > deadline_steps:
+                pool.free(req.rid)         # reclaim exactly once
+                slot_req[s] = None
+                preemptions += 1
+                req.retries += 1
+                req.generated = 0
+                if req.retries > req.max_retries:
+                    finish(req, failed, steps)
+                else:
+                    requeues += 1
+                    waiting.append(
+                        (steps + backoff_steps * (2 ** (req.retries - 1)),
+                         req))
+    dt = max(time.time() - t0, 1e-9)
+    pool.assert_quiescent()
+    if len(completed) + len(rejected) + len(failed) != n_requests:
+        raise ServeError(
+            f"{len(completed)} completed + {len(rejected)} rejected + "
+            f"{len(failed)} failed != {n_requests} submitted")
+    lat = sorted(r.done_step - r.submit_step for r in completed) or [0]
+    return {
+        "steps": steps, "completed": len(completed),
+        "rejected": len(rejected), "failed": len(failed),
+        # live-slot decode tokens only — idle slots and faulted/discarded
+        # ticks contribute nothing (the legacy loop counted steps*batch)
+        "tokens_per_s": decode_tokens / dt,
+        "decode_tokens": decode_tokens, "prefill_tokens": prefill_tokens,
+        "wall_s": dt,
+        "preemptions": preemptions, "requeues": requeues,
+        "step_faults": step_faults, "nan_steps": nan_steps,
+        "alloc_faults": alloc_faults,
+        "latency_p50_steps": lat[len(lat) // 2],
+        "latency_p99_steps": lat[min(len(lat) - 1,
+                                     int(len(lat) * 0.99))],
+        "pages": pool.stats(),
+    }
+
+
+# ----------------------------------------------------------------------
+# Fault matrix: one seeded scenario per fault kind, each asserting the
+# exactly-once serving contract end to end (scripts/ci.sh smoke stage and
+# tests/test_serve_runtime.py both drive this table).
+# ----------------------------------------------------------------------
+
+def _matrix_scenarios():
+    F = _faults.FaultSpec
+    return (
+        # a kernel raise during dispatch: guarded dispatch must demote
+        # down the ladder within the step, serving continues
+        ("kernel-raise", [F(point=_faults.CONTRACT_DISPATCH,
+                            kind=_faults.RAISE, max_fires=2)], {}),
+        # silent corruption: poisoned logits the NaN guard must discard
+        ("nan-poison", [F(point=_faults.SERVE_STEP, kind=_faults.NAN,
+                          every=2, max_fires=3)], {}),
+        # page exhaustion: a pool smaller than the offered load — requests
+        # queue at admission and drain as pages are reclaimed
+        ("page-exhaustion", [], {"total_pages_factor": 0.5}),
+        # straggler tick: injected latency the loop must absorb
+        ("latency-spike", [F(point=_faults.SERVE_STEP, kind=_faults.LATENCY,
+                             every=2, max_fires=2, latency_s=0.02)], {}),
+        # crashed decode ticks: no tokens produced, slots age, the loop
+        # retries the tick and every request still completes
+        ("step-crash", [F(point=_faults.SERVE_STEP, kind=_faults.RAISE,
+                          every=3, max_fires=3)], {}),
+        # transient allocator failure: admission requeues with backoff
+        ("alloc-fault", [F(point=_faults.KV_ALLOC, kind=_faults.RAISE,
+                           max_fires=2)], {}),
+    )
+
+
+def run_fault_matrix(cfg, params, *, batch=2, prompt_len=8, gen_len=6,
+                     n_requests=4, seed=0) -> list[dict]:
+    """Run every fault scenario; each must serve all requests exactly once
+    with the page pool fully reclaimed (serve_loop raises otherwise)."""
+    results = []
+    for name, specs, opts in _matrix_scenarios():
+        page_size = 4
+        worst = -(-(prompt_len + gen_len) // page_size)
+        total = worst * batch
+        if "total_pages_factor" in opts:
+            total = max(worst, int(total * opts["total_pages_factor"]))
+        plan = _faults.FaultPlan(specs, seed=seed)
+        lowering.clear_guard_state()
+        with facility.configure(dataclasses.replace(
+                facility.current(), guards=True)):
+            with _faults.install(plan):
+                out = serve_loop(
+                    cfg, params, batch=batch, prompt_len=prompt_len,
+                    gen_len=gen_len, n_requests=n_requests, seed=seed,
+                    page_size=page_size, total_pages=total,
+                    deadline_steps=gen_len * 6, max_retries=3)
+        ok = (out["completed"] == n_requests and out["rejected"] == 0
+              and out["failed"] == 0)
+        results.append({"scenario": name, "ok": ok,
+                        "fired": len(plan.events),
+                        "demotions": len(lowering.GUARD_EVENTS), **out})
+    return results
 
 
 def main():
@@ -87,17 +380,51 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=None)
+    ap.add_argument("--deadline", type=int, default=None)
+    ap.add_argument("--guards", action="store_true")
+    ap.add_argument("--fault-matrix", action="store_true",
+                    help="run the seeded fault-injection matrix instead "
+                         "of a plain serving run")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(cfg, jax.random.key(0))
-    out = serve_loop(cfg, params, batch=args.batch,
-                     prompt_len=args.prompt_len, gen_len=args.gen,
-                     n_requests=args.requests)
+
+    if args.fault_matrix:
+        results = run_fault_matrix(cfg, params, batch=args.batch,
+                                   prompt_len=args.prompt_len,
+                                   gen_len=args.gen,
+                                   n_requests=args.requests)
+        bad = [r for r in results if not r["ok"]]
+        for r in results:
+            print(f"[{'ok' if r['ok'] else 'FAIL'}] {r['scenario']:16s} "
+                  f"completed={r['completed']} faults={r['fired']} "
+                  f"preempt={r['preemptions']} requeue={r['requeues']} "
+                  f"pages_hw={r['pages']['high_water_pages']}")
+        if bad:
+            raise SystemExit(f"fault matrix failed: "
+                             f"{[r['scenario'] for r in bad]}")
+        print(f"fault matrix clean: {len(results)} scenarios, every "
+              f"request served exactly once, pages fully reclaimed")
+        return
+
+    guards = args.guards
+    with facility.configure(dataclasses.replace(facility.current(),
+                                                guards=guards)):
+        out = serve_loop(cfg, params, batch=args.batch,
+                         prompt_len=args.prompt_len, gen_len=args.gen,
+                         n_requests=args.requests, page_size=args.page_size,
+                         total_pages=args.pages,
+                         deadline_steps=args.deadline)
     print(f"served {out['completed']} requests in {out['steps']} steps, "
-          f"{out['tokens_per_s']:.1f} tok/s (batched)")
+          f"{out['tokens_per_s']:.1f} live tok/s "
+          f"({out['decode_tokens']} decode + {out['prefill_tokens']} "
+          f"prefill tokens, pages hw={out['pages']['high_water_pages']}"
+          f"/{out['pages']['total_pages']})")
 
 
 if __name__ == "__main__":

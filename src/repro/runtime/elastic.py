@@ -17,8 +17,14 @@ Large fleets fail constantly; the framework's contract (DESIGN.md section 5):
     container we surface the signal and keep going — the policy hook is
     the deliverable).  On real fleets this watchdog pairs with hot
     spares; the trigger logic is identical.
-  * **Failure injection** for tests: ``fail_at_steps`` raises
-    ``SimulatedFailure`` mid-run, exercising the restart path.
+  * **Failure injection**: the facility-wide registry
+    (``repro.runtime.faults``) owns injection — pass a
+    :class:`~repro.runtime.faults.FaultPlan` as ``faults=``, or use the
+    legacy ``cfg.fail_at_steps`` shorthand, which the trainer translates
+    into ``train.step`` at-step specs on the same plan ("a node dies
+    once" is the registry's at-step semantics).  ``raise`` kinds become
+    :class:`SimulatedFailure` (the restart path), ``latency`` kinds
+    become injected stragglers the watchdog must catch.
 """
 
 from __future__ import annotations
@@ -31,10 +37,13 @@ from typing import Any, Callable, Iterable
 import jax
 
 from repro.checkpoint.checkpoint import Checkpointer
+from repro.runtime import faults as _faults
 
 
-class SimulatedFailure(RuntimeError):
-    pass
+class SimulatedFailure(_faults.InjectedFault):
+    """A mid-step node death.  Subclasses the registry's InjectedFault so
+    one ``except`` in the restart loop covers both the trainer's own
+    injections and faults raised by deeper layers (checkpoint.save)."""
 
 
 class StragglerDetected(RuntimeError):
@@ -52,7 +61,7 @@ class ElasticConfig:
     straggler_factor: float = 3.0
     straggler_patience: int = 3
     straggler_window: int = 16
-    fail_at_steps: tuple = ()      # test hook
+    fail_at_steps: tuple = ()      # legacy test hook -> train.step specs
     raise_on_straggler: bool = False
 
 
@@ -61,19 +70,37 @@ class ElasticTrainer:
                  make_state: Callable[[], Any],
                  batches: Callable[[int], Iterable],
                  checkpointer: Checkpointer,
-                 cfg: ElasticConfig = ElasticConfig(),
-                 state_shardings: Any = None):
+                 cfg: ElasticConfig | None = None,
+                 state_shardings: Any = None,
+                 faults: _faults.FaultPlan | None = None):
         self.make_step = make_step
         self.make_state = make_state
         self.batches = batches
         self.ckpt = checkpointer
-        self.cfg = cfg
+        # NOTE: never a `cfg: ElasticConfig = ElasticConfig()` default —
+        # a dataclass default in the signature is evaluated ONCE and
+        # shared by every trainer in the process (a real aliasing hazard
+        # the moment configs grow mutable state).
+        self.cfg = cfg if cfg is not None else ElasticConfig()
         self.state_shardings = state_shardings
+        self.faults = faults if faults is not None else _faults.FaultPlan()
         self.restarts = 0
         self.straggler_events: list[int] = []
-        self._fired_failures: set[int] = set()
+        self._failspecs_synced = False
 
     # ------------------------------------------------------------------
+    def _sync_failspecs(self):
+        """Translate the legacy cfg.fail_at_steps shorthand onto the
+        registry plan (once; re-reads cfg at run() so tests that swap
+        cfg post-construction keep working)."""
+        if self._failspecs_synced:
+            return
+        self._failspecs_synced = True
+        if self.cfg.fail_at_steps:
+            self.faults.add(_faults.FaultSpec(
+                point=_faults.TRAIN_STEP, kind=_faults.RAISE,
+                at_steps=tuple(self.cfg.fail_at_steps), max_fires=None))
+
     def _restore_or_init(self):
         latest = self.ckpt.latest_step()
         state = self.make_state()
@@ -85,7 +112,16 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
     def run(self, total_steps: int) -> dict:
         """Train until total_steps, surviving injected failures."""
+        self._sync_failspecs()
         metrics_log = []
+        with _faults.install(self.faults):
+            return self._run(total_steps, metrics_log)
+
+    def _run(self, total_steps: int, metrics_log: list) -> dict:
+        # the trainer's plan is ambient for the whole run so deeper layers
+        # (checkpoint.save, contract.dispatch) fire against it too; the
+        # async checkpoint writer runs on a fresh thread context, so
+        # save faults deterministically hit the SYNC save boundary
         while True:
             try:
                 state, start = self._restore_or_init()
@@ -95,11 +131,16 @@ class ElasticTrainer:
                 for step, batch in self.batches(start):
                     if step >= total_steps:
                         break
-                    if (step in self.cfg.fail_at_steps
-                            and step not in self._fired_failures):
-                        self._fired_failures.add(step)  # a node dies once
-                        raise SimulatedFailure(f"injected at step {step}")
                     t0 = time.time()
+                    fault = self.faults.fire(_faults.TRAIN_STEP, step=step)
+                    if fault is not None:
+                        if fault.kind == _faults.RAISE:
+                            raise SimulatedFailure(
+                                f"injected at step {step}")
+                        if fault.kind == _faults.LATENCY:
+                            # inside the timed window: an injected
+                            # straggler the watchdog must catch
+                            time.sleep(fault.latency_s)
                     state, metrics = step_fn(state, batch)
                     jax.block_until_ready(metrics["loss"])
                     dt = time.time() - t0
@@ -127,7 +168,7 @@ class ElasticTrainer:
                 return {"state": state, "metrics": metrics_log,
                         "restarts": self.restarts,
                         "stragglers": self.straggler_events}
-            except SimulatedFailure:
+            except _faults.InjectedFault:
                 self.restarts += 1
                 self.ckpt.wait()
                 if self.restarts > self.cfg.max_restarts:

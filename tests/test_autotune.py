@@ -128,3 +128,99 @@ def test_autotune_force_retunes(tmp_path):
     retuned = autotune.autotune(Ger.BF16GER2, 256, 256, 128, cache=cache,
                                 force=True)
     assert retuned != tiling.BlockConfig(8, 128, 128)
+
+
+# ----------------------------------------------------------------------
+# Cache robustness: corrupt files degrade to the heuristic and heal on
+# the next save; writes are atomic under injected crash/torn faults.
+# ----------------------------------------------------------------------
+
+def _store_one(cache):
+    key = autotune.cache_key(Ger.BF16GER2, 128, 128, 128)
+    cache.put(key, tiling.BlockConfig(64, 128, 128),
+              source="traced", score=1.0)
+    return key
+
+
+@pytest.mark.parametrize("garbage", [
+    b"",                                   # empty file
+    b"{\"version\": 3, \"entri",           # truncated mid-write
+    b"not json at all \x00\xff",           # binary garbage
+    b"[1, 2, 3]",                          # valid JSON, wrong shape
+    b"{\"version\": 3, \"entries\": 7}",   # entries not a mapping
+])
+def test_corrupt_cache_degrades_to_heuristic_and_heals(tmp_path, garbage):
+    path = tmp_path / "at.json"
+    path.write_bytes(garbage)
+    cache = autotune.AutotuneCache(path)
+    # corrupt file reads as empty -> lookup misses -> dispatch would fall
+    # back to choose_blocks, never crash
+    assert len(cache) == 0
+    assert autotune.lookup(Ger.BF16GER2, 128, 128, 128, cache=cache) is None
+    # first save rewrites the whole store atomically: the file heals
+    key = _store_one(cache)
+    blob = json.loads(path.read_text())
+    assert blob["version"] == autotune.CACHE_VERSION
+    assert key in blob["entries"]
+    fresh = autotune.AutotuneCache(path)
+    assert fresh.get(key) == tiling.BlockConfig(64, 128, 128)
+
+
+def test_save_is_atomic_under_torn_write_fault(tmp_path):
+    from repro.runtime import faults
+
+    path = tmp_path / "at.json"
+    cache = autotune.AutotuneCache(path)
+    key = _store_one(cache)                       # good store on disk
+    before = path.read_text()
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.AUTOTUNE_SAVE, kind=faults.TORN)])
+    with faults.install(plan):
+        cache.put(autotune.cache_key(Ger.F32GER, 64, 64, 64),
+                  tiling.BlockConfig(32, 128, 128),
+                  source="traced", score=2.0)
+    assert plan.fired(faults.AUTOTUNE_SAVE)
+    # the torn write never reached the published file...
+    assert path.read_text() == before
+    assert not list(tmp_path.glob("*.tmp"))       # and left no litter
+    # ...and a reader of the published file sees the intact old store
+    fresh = autotune.AutotuneCache(path)
+    assert fresh.get(key) == tiling.BlockConfig(64, 128, 128)
+
+
+def test_save_failure_keeps_memory_and_disk_consistent(tmp_path):
+    from repro.runtime import faults
+
+    path = tmp_path / "at.json"
+    cache = autotune.AutotuneCache(path)
+    key = _store_one(cache)
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.AUTOTUNE_SAVE, kind=faults.RAISE)])
+    key2 = autotune.cache_key(Ger.F32GER, 64, 64, 64)
+    with faults.install(plan):
+        cache.put(key2, tiling.BlockConfig(32, 128, 128),
+                  source="traced", score=2.0)     # must not raise
+    # in-memory winner survives the failed persist; disk keeps old store
+    assert cache.get(key2) == tiling.BlockConfig(32, 128, 128)
+    assert key2 not in json.loads(path.read_text())["entries"]
+    assert not list(tmp_path.glob("*.tmp"))
+    # next successful save persists BOTH entries (heal-on-save)
+    cache.put(autotune.cache_key(Ger.F64GER, 32, 32, 32),
+              tiling.BlockConfig(16, 128, 128), source="traced", score=3.0)
+    blob = json.loads(path.read_text())
+    assert key in blob["entries"] and key2 in blob["entries"]
+
+
+def test_load_fault_degrades_like_corruption(tmp_path):
+    from repro.runtime import faults
+
+    path = tmp_path / "at.json"
+    cache = autotune.AutotuneCache(path)
+    key = _store_one(cache)
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.AUTOTUNE_LOAD, kind=faults.RAISE)])
+    victim = autotune.AutotuneCache(path)         # fresh (lazy) reader
+    with faults.install(plan):
+        assert victim.get(key) is None            # load failed -> empty
+    # the file itself is fine: an untainted reader still sees the winner
+    assert autotune.AutotuneCache(path).get(key) is not None

@@ -1,0 +1,139 @@
+"""Fault-injection registry: trigger semantics, ambient plan, appliers."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import faults
+
+
+def _plan(*specs, seed=0):
+    return faults.FaultPlan(specs, seed=seed)
+
+
+# ---------------------------------------------------------------------
+# triggers
+# ---------------------------------------------------------------------
+
+def test_at_steps_fires_each_listed_step_once():
+    p = _plan(faults.FaultSpec(point=faults.TRAIN_STEP, at_steps=(2, 5),
+                               max_fires=None))
+    fired = [s for s in range(8) if p.fire(faults.TRAIN_STEP, step=s)]
+    assert fired == [2, 5]
+    # a node dies once: revisiting the same step after restart won't re-fire
+    assert p.fire(faults.TRAIN_STEP, step=2) is None
+    assert p.fire(faults.TRAIN_STEP, step=5) is None
+
+
+def test_every_n_fires_on_nth_visits():
+    p = _plan(faults.FaultSpec(point=faults.SERVE_STEP, every=3,
+                               max_fires=None))
+    fired = [i for i in range(9) if p.fire(faults.SERVE_STEP)]
+    assert fired == [2, 5, 8]        # visits 3, 6, 9
+
+
+def test_probability_is_seeded_and_reproducible():
+    def run(seed):
+        p = _plan(faults.FaultSpec(point=faults.KV_ALLOC, p=0.5,
+                                   max_fires=None), seed=seed)
+        return [bool(p.fire(faults.KV_ALLOC)) for _ in range(32)]
+
+    a, b = run(7), run(7)
+    assert a == b
+    assert any(a) and not all(a)
+
+
+def test_max_fires_bounds_total():
+    p = _plan(faults.FaultSpec(point=faults.SERVE_STEP, every=1,
+                               max_fires=2))
+    fired = [bool(p.fire(faults.SERVE_STEP)) for _ in range(5)]
+    assert fired == [True, True, False, False, False]
+    assert len(p.events) == 2
+
+
+def test_default_trigger_is_first_visit_only():
+    p = _plan(faults.FaultSpec(point=faults.AUTOTUNE_LOAD))
+    assert p.fire(faults.AUTOTUNE_LOAD) is not None
+    assert p.fire(faults.AUTOTUNE_LOAD) is None
+
+
+def test_specs_trigger_independently_and_first_match_wins():
+    p = _plan(faults.FaultSpec(point=faults.SERVE_STEP, kind=faults.NAN,
+                               every=2, max_fires=None),
+              faults.FaultSpec(point=faults.SERVE_STEP, kind=faults.LATENCY,
+                               every=3, max_fires=None))
+    kinds = [f.kind if (f := p.fire(faults.SERVE_STEP)) else None
+             for _ in range(6)]
+    # visit 2/4/6 -> nan (first spec), visit 3 -> latency, 1/5 -> none
+    assert kinds == [None, faults.NAN, faults.LATENCY, faults.NAN,
+                     None, faults.NAN]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        faults.FaultSpec(point="not.a.point")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(point=faults.SERVE_STEP, kind="explode")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(point=faults.SERVE_STEP, p=1.5)
+
+
+# ---------------------------------------------------------------------
+# ambient plan + hooks
+# ---------------------------------------------------------------------
+
+def test_no_plan_hooks_are_noops():
+    assert faults.active() is None
+    assert faults.fire(faults.SERVE_STEP) is None
+    assert faults.maybe_inject(faults.SERVE_STEP) is None
+
+
+def test_install_scopes_and_restores():
+    p = _plan(faults.FaultSpec(point=faults.SERVE_STEP))
+    with faults.install(p):
+        assert faults.active() is p
+        assert faults.fire(faults.SERVE_STEP) is not None
+    assert faults.active() is None
+    assert p.fired(faults.SERVE_STEP)
+
+
+def test_maybe_inject_raises_for_raise_kind():
+    p = _plan(faults.FaultSpec(point=faults.KV_ALLOC, kind=faults.RAISE))
+    with faults.install(p):
+        with pytest.raises(faults.InjectedFault):
+            faults.maybe_inject(faults.KV_ALLOC)
+
+
+def test_maybe_inject_returns_data_kinds_for_caller():
+    p = _plan(faults.FaultSpec(point=faults.SERVE_STEP, kind=faults.NAN))
+    with faults.install(p):
+        f = faults.maybe_inject(faults.SERVE_STEP)
+    assert f is not None and f.kind == faults.NAN
+
+
+# ---------------------------------------------------------------------
+# appliers
+# ---------------------------------------------------------------------
+
+def test_poison_floats_passes_ints():
+    import jax.numpy as jnp
+    x = jnp.ones((2, 3), jnp.float32)
+    assert bool(jnp.isnan(faults.poison(x)).all())
+    i = jnp.ones((2,), jnp.int32)
+    assert faults.poison(i) is i
+
+
+def test_tear_truncates_file(tmp_path):
+    f = tmp_path / "blob.bin"
+    f.write_bytes(b"x" * 100)
+    assert faults.tear(f)
+    assert f.stat().st_size == 50
+    assert not faults.tear(tmp_path / "missing.bin")
+
+
+def test_events_record_point_kind_step():
+    p = _plan(faults.FaultSpec(point=faults.TRAIN_STEP, at_steps=(3,)))
+    p.fire(faults.TRAIN_STEP, step=3)
+    (ev,) = p.events
+    assert (ev.point, ev.kind, ev.step) == (faults.TRAIN_STEP,
+                                            faults.RAISE, 3)
+    assert np.isfinite(ev.latency_s)

@@ -1,0 +1,153 @@
+"""Guarded contract dispatch: degradation ladder, quarantine, and the
+guards-off bitwise-identity contract."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility, lowering
+from repro.runtime import faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_guard_state():
+    lowering.clear_guard_state()
+    yield
+    lowering.clear_guard_state()
+
+
+def _xy(m=8, k=16, n=8, seed=0):
+    kx, ky = jax.random.split(jax.random.key(seed))
+    return (jax.random.normal(kx, (m, k), jnp.float32),
+            jax.random.normal(ky, (k, n), jnp.float32))
+
+
+def _guarded():
+    return facility.configure(
+        dataclasses.replace(facility.current(), guards=True))
+
+
+def _ref_count(op_class="gemm"):
+    return sum(v for (b, oc, _), v in lowering.DISPATCH_COUNTS.items()
+               if b == "ref" and oc == op_class)
+
+
+def test_guards_off_bitwise_unchanged():
+    """With guards off and no plan installed the dispatch tail must be
+    byte-identical to the guarded config's no-fault path — enabling the
+    feature may not perturb numerics."""
+    x, y = _xy()
+    assert faults.active() is None
+    base = np.asarray(facility.contract("mk,kn->mn", x, y))
+    with _guarded():
+        guarded = np.asarray(facility.contract("mk,kn->mn", x, y))
+    assert base.dtype == guarded.dtype
+    assert base.tobytes() == guarded.tobytes()
+    assert lowering.GUARD_EVENTS == []
+    assert lowering.quarantine_state() == {}
+
+
+def test_injected_raise_demotes_within_one_call():
+    """A kernel that raises mid-dispatch is demoted down the ladder inside
+    the same contract call — the caller still gets a correct output."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y))
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.RAISE)])
+    with _guarded(), faults.install(plan):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y))
+    assert len(plan.events) == 1
+    demotions = [e for e in lowering.GUARD_EVENTS
+                 if e["to"] == "ref" and "InjectedFault" in e["reason"]]
+    assert demotions, lowering.GUARD_EVENTS
+    np.testing.assert_allclose(out, base, rtol=1e-2, atol=1e-2)
+    assert "ref" in lowering.quarantine_state().values()
+
+
+def test_quarantine_not_retried_per_call():
+    """After a demotion, later calls with the same key start at the
+    demoted rung — the broken rung is not probed on every call."""
+    x, y = _xy()
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.RAISE)])
+    with _guarded(), faults.install(plan):
+        facility.contract("mk,kn->mn", x, y)
+        n_events = len(lowering.GUARD_EVENTS)
+        before = _ref_count()
+        facility.contract("mk,kn->mn", x, y)   # plan exhausted: no fault
+    assert len(lowering.GUARD_EVENTS) == n_events   # no new demotion
+    assert _ref_count() == before + 1               # served from ref rung
+
+
+def test_nan_poison_demotes_and_recovers():
+    """A rung whose output is poisoned is demoted; the clean rung's finite
+    output is returned and the quarantine commits."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y))
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.NAN)])
+    with _guarded(), faults.install(plan):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, base, rtol=1e-2, atol=1e-2)
+    assert any(e["reason"] == "non-finite output"
+               for e in lowering.GUARD_EVENTS)
+    assert "ref" in lowering.quarantine_state().values()
+
+
+def test_input_borne_nan_is_not_quarantined():
+    """When every rung is non-finite the NaN came in through the operands
+    — the output is returned as-is and no rung is blamed."""
+    x, y = _xy()
+    x = x.at[0, 0].set(jnp.nan)
+    with _guarded():
+        out = np.asarray(facility.contract("mk,kn->mn", x, y))
+    assert not np.isfinite(out).all()
+    assert lowering.quarantine_state() == {}
+
+
+def test_guarded_dispatch_transparent_under_jit():
+    """Inside someone else's jit the outputs are tracers: the value
+    detector must pass through (no ConcretizationTypeError) while the
+    exception ladder still applies at trace time."""
+    x, y = _xy()
+
+    @jax.jit
+    def f(x, y):
+        return facility.contract("mk,kn->mn", x, y)
+
+    base = np.asarray(f(x, y))
+    with _guarded():
+        out = np.asarray(f(x, y))
+    np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-5)
+
+
+def test_trace_time_fault_demotes_inside_jit():
+    """A raise-kind fault during jit tracing demotes at trace time and the
+    compiled function still returns correct values."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y))
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.RAISE)])
+
+    def f(x, y):
+        return facility.contract("mk,kn->mn", x, y)
+
+    with _guarded(), faults.install(plan):
+        out = np.asarray(jax.jit(f)(x, y))
+    assert lowering.GUARD_EVENTS
+    np.testing.assert_allclose(out, base, rtol=1e-2, atol=1e-2)
+
+
+def test_unguarded_dispatch_propagates_injected_raise():
+    """Guards off: the fault harness still fires but nothing absorbs it —
+    the raise surfaces to the caller (guards are the mitigation)."""
+    x, y = _xy()
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.RAISE)])
+    with faults.install(plan):
+        with pytest.raises(faults.InjectedFault):
+            facility.contract("mk,kn->mn", x, y)

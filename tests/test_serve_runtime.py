@@ -1,0 +1,183 @@
+"""Serving runtime: PagePool ledger invariants, admission control,
+preempt/requeue lifecycle, and the end-to-end fault matrix."""
+
+import jax
+import pytest
+
+from repro.configs import get
+from repro.configs.base import reduced
+from repro.launch import serve
+from repro.models import model as M
+from repro.runtime import faults
+from repro.runtime.kv_pages import (PageAccountingError, PagePool,
+                                    PagesExhausted)
+
+
+# ---------------------------------------------------------------------
+# PagePool unit tests (no model, no jax tracing)
+# ---------------------------------------------------------------------
+
+def test_pool_footprint_math():
+    pool = PagePool(total_pages=8, page_size=4)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.pages_for(0) == 1        # a request always holds a page
+    assert pool.fits(32) and not pool.fits(33)
+
+
+def test_pool_alloc_free_exactly_once():
+    pool = PagePool(total_pages=4, page_size=4)
+    a = pool.alloc(0, 7)                 # 2 pages
+    assert len(a.pages) == 2 and pool.used_pages == 2
+    pool.alloc(1, 8)
+    assert pool.free_pages == 0 and pool.high_water == 4
+    with pytest.raises(PagesExhausted):
+        pool.alloc(2, 1)
+    assert pool.free(0) == 2
+    with pytest.raises(PageAccountingError):   # double free
+        pool.free(0)
+    with pytest.raises(PageAccountingError):   # double admission
+        pool.alloc(1, 1)
+    pool.free(1)
+    pool.assert_quiescent()
+    assert pool.allocs == 2 and pool.frees == 2
+
+
+def test_pool_exhaustion_allocates_nothing_partially():
+    pool = PagePool(total_pages=3, page_size=4)
+    pool.alloc(0, 8)                     # 2 pages
+    with pytest.raises(PagesExhausted):
+        pool.alloc(1, 8)                 # needs 2, only 1 free
+    assert pool.free_pages == 1          # nothing leaked by the failure
+    pool.free(0)
+    pool.assert_quiescent()
+
+
+def test_pool_quiescence_detects_leak():
+    pool = PagePool(total_pages=2, page_size=4)
+    pool.alloc(7, 4)
+    with pytest.raises(PageAccountingError):
+        pool.assert_quiescent()
+
+
+def test_pool_alloc_fault_point():
+    pool = PagePool(total_pages=2, page_size=4)
+    plan = faults.FaultPlan([faults.FaultSpec(point=faults.KV_ALLOC,
+                                              kind=faults.RAISE)])
+    with faults.install(plan):
+        with pytest.raises(faults.InjectedFault):
+            pool.alloc(0, 4)
+        pool.alloc(0, 4)                 # transient: next try succeeds
+    pool.free(0)
+    pool.assert_quiescent()
+
+
+# ---------------------------------------------------------------------
+# serving loop (reduced ssm model — per-slot cache, exact prefill handoff)
+# ---------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get("mamba2-130m"))
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_serve_counts_live_tokens_only(served_model):
+    cfg, params = served_model
+    out = serve.serve_loop(cfg, params, batch=4, prompt_len=8, gen_len=6,
+                           n_requests=1)
+    assert out["completed"] == 1
+    # one request on a 4-slot loop: idle slots must not inflate the count
+    # (the legacy loop reported steps * batch)
+    assert out["decode_tokens"] <= 6
+    assert out["decode_tokens"] < out["steps"] * 4
+    assert out["prefill_tokens"] == 8
+    assert out["pages"]["allocs"] == out["pages"]["frees"] == 1
+
+
+def test_serve_admission_queues_on_page_pressure(served_model):
+    cfg, params = served_model
+    out = serve.serve_loop(cfg, params, batch=4, prompt_len=8, gen_len=6,
+                           n_requests=6, page_size=4,
+                           total_pages=serve.PagePool(1, 4).pages_for(14))
+    # pool covers exactly ONE request: serving degrades to serial, never
+    # crashes, and every request still completes
+    assert out["completed"] == 6 and out["failed"] == 0
+    assert out["pages"]["high_water_pages"] == out["pages"]["total_pages"]
+
+
+def test_serve_rejects_oversized_requests(served_model):
+    cfg, params = served_model
+    out = serve.serve_loop(cfg, params, batch=2, prompt_len=8, gen_len=6,
+                           n_requests=3, page_size=4, total_pages=2)
+    # footprint (14 tokens -> 4 pages) exceeds the whole pool (2):
+    # admission rejects up front instead of wedging the queue
+    assert out["rejected"] == 3 and out["completed"] == 0
+    assert out["pages"]["allocs"] == 0
+
+
+def test_serve_preempts_and_requeues_on_deadline(served_model):
+    cfg, params = served_model
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.SERVE_STEP, kind=faults.RAISE, every=1, max_fires=8)])
+    with faults.install(plan):
+        out = serve.serve_loop(cfg, params, batch=1, prompt_len=4,
+                               gen_len=4, n_requests=1, deadline_steps=3,
+                               backoff_steps=2, max_retries=5)
+    # crashed ticks produce no tokens -> the slot ages past its deadline,
+    # is preempted (pages reclaimed), requeued with backoff, and finally
+    # completes once the fault burst ends
+    assert out["step_faults"] >= 1
+    assert out["preemptions"] >= 1 and out["requeues"] >= 1
+    assert out["completed"] == 1 and out["failed"] == 0
+
+
+def test_serve_fails_request_after_retry_budget(served_model):
+    cfg, params = served_model
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.SERVE_STEP, kind=faults.RAISE, every=1,
+        max_fires=None)])
+    with faults.install(plan):
+        out = serve.serve_loop(cfg, params, batch=1, prompt_len=4,
+                               gen_len=4, n_requests=1, deadline_steps=2,
+                               backoff_steps=1, max_retries=2)
+    # a permanently-broken step can never finish the request: it is
+    # failed (counted, pages reclaimed) rather than retried forever
+    assert out["failed"] == 1 and out["completed"] == 0
+    assert out["preemptions"] == 3          # initial try + 2 retries
+    assert out["pages"]["allocs"] == out["pages"]["frees"] == 3
+
+
+def test_serve_nan_guard_discards_poisoned_tick(served_model):
+    cfg, params = served_model
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.SERVE_STEP, kind=faults.NAN, every=3, max_fires=2)])
+    with faults.install(plan):
+        out = serve.serve_loop(cfg, params, batch=2, prompt_len=4,
+                               gen_len=6, n_requests=2, guards=True)
+    assert out["nan_steps"] >= 1
+    assert out["completed"] == 2
+
+
+def test_fault_matrix_every_request_served_exactly_once(served_model):
+    cfg, params = served_model
+    results = serve.run_fault_matrix(cfg, params, batch=2, prompt_len=6,
+                                     gen_len=5, n_requests=3)
+    assert len(results) >= 5
+    for r in results:
+        assert r["ok"], (r["scenario"], r)
+        assert r["completed"] == 3
+    by_name = {r["scenario"]: r for r in results}
+    # each scenario exercised its fault: the plan actually fired ...
+    for name in ("kernel-raise", "nan-poison", "latency-spike",
+                 "step-crash", "alloc-fault"):
+        assert by_name[name]["fired"] >= 1, name
+    # ... and the mitigations engaged
+    assert by_name["kernel-raise"]["demotions"] >= 1
+    assert by_name["nan-poison"]["nan_steps"] >= 1
+    assert by_name["step-crash"]["step_faults"] >= 1
+    assert by_name["alloc-fault"]["requeues"] >= 1
+    assert (by_name["page-exhaustion"]["pages"]["high_water_pages"]
+            <= by_name["page-exhaustion"]["pages"]["total_pages"])

@@ -13,6 +13,7 @@ from repro.configs import get
 from repro.configs.base import reduced
 from repro.data import pipeline
 from repro.optim import adamw, compression, schedule
+from repro.runtime import faults
 from repro.runtime.elastic import (ElasticConfig, ElasticTrainer,
                                    SimulatedFailure)
 from repro.train import steps as S
@@ -200,3 +201,83 @@ def test_elastic_restart_is_deterministic(tmp_path):
     by_step_clean = {m["step"]: m["loss"] for m in out_clean["metrics"]}
     for s in range(8):
         assert abs(by_step_fail[s] - by_step_clean[s]) < 1e-4, s
+
+
+def test_elastic_waits_for_async_ckpt_on_failure_path(tmp_path):
+    """The restart path must join the in-flight async save before
+    restoring — otherwise restore can read a half-written step."""
+    tr = _mini_trainer(tmp_path, fail_at=(5,))
+    waits = []
+    orig_wait = tr.ckpt.wait
+    tr.ckpt.wait = lambda: (waits.append(True), orig_wait())[1]
+    out = tr.run(10)
+    assert out["restarts"] == 1
+    # one wait on the failure path (before restore), one at clean finish
+    assert len(waits) >= 2
+
+
+def test_elastic_faultplan_latency_triggers_watchdog(tmp_path):
+    """A latency-kind train.step fault is an injected straggler: the
+    wall-clock watchdog must flag it (no restart — the step is slow,
+    not dead)."""
+    tr = _mini_trainer(tmp_path)
+    tr.cfg = ElasticConfig(ckpt_every=100, straggler_factor=3.0,
+                           straggler_patience=1)
+    tr.faults.add(faults.FaultSpec(
+        point=faults.TRAIN_STEP, kind=faults.LATENCY, at_steps=(6,),
+        latency_s=2.0))
+    out = tr.run(8)
+    assert out["restarts"] == 0
+    assert 6 in out["stragglers"]
+
+
+def test_elastic_survives_checkpoint_save_fault(tmp_path):
+    """A crash during checkpoint save is just another InjectedFault: the
+    restart loop absorbs it, and atomic-rename means the torn save is
+    invisible — training resumes from the last COMPLETE step."""
+    tr = _mini_trainer(tmp_path)
+    tr.faults.add(faults.FaultSpec(
+        point=faults.CHECKPOINT_SAVE, kind=faults.RAISE, at_steps=(10,)))
+    out = tr.run(10)         # final sync save at step 10 crashes once
+    assert out["restarts"] == 1
+    # the retry (after restart from the async step-8 ckpt) succeeded
+    assert tr.ckpt.latest_step() == 10
+    steps_seen = [m["step"] for m in out["metrics"]]
+    assert steps_seen.count(8) == 2          # resumed from 8, not 0
+
+
+def test_checkpoint_save_faults_never_corrupt_latest(tmp_path):
+    """Both crash kinds at checkpoint.save leave latest_step() on the
+    previous complete step — the atomicity the restart story needs."""
+    ckpt = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ckpt.save(4, tree)
+    assert ckpt.latest_step() == 4
+    plan = faults.FaultPlan([
+        faults.FaultSpec(point=faults.CHECKPOINT_SAVE, kind=faults.TORN,
+                         at_steps=(8,)),
+        faults.FaultSpec(point=faults.CHECKPOINT_SAVE, kind=faults.RAISE,
+                         at_steps=(12,))])
+    with faults.install(plan):
+        ckpt.save(8, tree)                   # torn: silently incomplete
+        with pytest.raises(faults.InjectedFault):
+            ckpt.save(12, tree)              # crash before rename
+    assert ckpt.latest_step() == 4
+    restored = ckpt.restore(4, {"w": jnp.zeros(8, jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8, dtype=np.float32))
+    ckpt.save(16, tree)                      # healthy save still works
+    assert ckpt.latest_step() == 16
+
+
+def test_elastic_trainers_do_not_share_config():
+    """Regression: the old `cfg: ElasticConfig = ElasticConfig()` default
+    was evaluated once and aliased across every trainer."""
+    mk = dict(make_step=lambda: None, make_state=lambda: None,
+              batches=lambda start: iter(()),
+              checkpointer=Checkpointer.__new__(Checkpointer))
+    a, b = ElasticTrainer(**mk), ElasticTrainer(**mk)
+    assert a.cfg is not b.cfg
+    assert a.faults is not b.faults
+    a.cfg.max_restarts = 99
+    assert b.cfg.max_restarts != 99
