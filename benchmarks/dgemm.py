@@ -16,14 +16,22 @@ the same (B, M, K) x (B, K, N) contraction dispatched as one batched
 kernel — measured wall clock of both, plus the v5e roofline projection
 where the vmapped trace is charged B kernel-launch overheads and the
 grid-native launch exactly one.
+
+The packed rows (``pgemm_N<n>``) track the prepacked-layout subsystem
+(core/packing.py): the same GEMM with the weight in its kernel-native
+panel stream (``y_layout=``, zero per-call relayout) versus natural
+layout, both through the interpreted Pallas kernel — wall clock of both
+plus a bitwise-equality bit (the packed fringe contract).
 """
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import autotune, tiling
+from repro.core import autotune, packing, tiling
 from repro.core.precision import Ger, policy
 from repro.kernels import ref
 from repro.kernels.mma_gemm import mma_gemm
@@ -76,4 +84,29 @@ def run():
              f"us_vmapped={us_vmapped:.1f};"
              f"v5e_util_grid_native={util_grid:.3f};"
              f"v5e_util_vmapped={util_vmap:.3f};"
+             f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")
+
+    # ---- packed sweep: prepacked weight panels vs natural layout ----
+    for n in (128, 256):
+        m, k = n, 128
+        cfg = tiling.choose_blocks(m, n, k, kind)
+        blk = (cfg.bm, cfg.bn, cfg.bk)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
+        lay = packing.GemmLayout(kind=kind, block=blk, side="y",
+                                 rows=k, cols=n)
+        po = packing.pack_gemm(w, lay)
+        natural = jax.jit(lambda a, c: mma_gemm(
+            a, c, kind=kind, block=blk, interpret=True))
+        packed = jax.jit(functools.partial(
+            mma_gemm, kind=kind, y_layout=lay, interpret=True))
+        us_nat = time_fn(natural, x, w)
+        us_pack = time_fn(packed, x, po.data)
+        bitwise = int(bool(
+            (np.asarray(natural(x, w)) == np.asarray(packed(x, po.data)))
+            .all()))
+        emit(f"pgemm_N{n}", us_pack,
+             f"us_natural={us_nat:.1f};"
+             f"us_packed={us_pack:.1f};"
+             f"bitwise_equal={bitwise};"
              f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")

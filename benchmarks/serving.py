@@ -2,9 +2,15 @@
 runtime (paged-KV admission, real prefill, honest token accounting).
 
 Rows:
-    serve_decode   — plain run: live decode tokens/s, page high-water
-    serve_guarded  — same run with guards on (the detector-sync cost the
-                     guards=False default avoids)
+    serve_decode    — plain run: live decode tokens/s, page high-water
+    serve_guarded   — same run with guards on (the detector-sync cost the
+                      guards=False default avoids)
+    serve_prepacked — same run with every weight prepacked into its
+                      kernel-native tile layout at admission
+                      (core/packing.py; launch/serve.py --prepack)
+
+Every row carries ``decode_tok_s`` — decode tokens over wall time, the
+steady-state serving throughput the prepacked path targets.
 """
 
 import dataclasses
@@ -15,6 +21,7 @@ from benchmarks import common
 from repro.configs import get
 from repro.configs.base import reduced
 from repro.core import facility
+from repro.core.packing import prepack_params_for_serving
 from repro.launch.serve import serve_loop
 from repro.models import model as M
 
@@ -25,19 +32,25 @@ BATCH, PROMPT, GEN, REQS = 4, 16, 12, 8
 def run():
     cfg = reduced(get(ARCH))
     params = M.init_params(cfg, jax.random.key(0))
+    packed_params, _ = prepack_params_for_serving(params, min_size=1024)
 
-    def one(guards):
+    def one(p, guards):
         with facility.configure(dataclasses.replace(
                 facility.current(), guards=guards)):
-            return serve_loop(cfg, params, batch=BATCH, prompt_len=PROMPT,
+            return serve_loop(cfg, p, batch=BATCH, prompt_len=PROMPT,
                               gen_len=GEN, n_requests=REQS, guards=guards)
 
-    for name, guards in (("serve_decode", False), ("serve_guarded", True)):
-        out = one(guards)
+    rows = (("serve_decode", params, False),
+            ("serve_guarded", params, True),
+            ("serve_prepacked", packed_params, False))
+    for name, p, guards in rows:
+        out = one(p, guards)
         us = out["wall_s"] / max(out["steps"], 1) * 1e6
+        decode_tok_s = out["decode_tokens"] / max(out["wall_s"], 1e-9)
         common.emit(
             name, us,
             f"tok_s={out['tokens_per_s']:.1f};"
+            f"decode_tok_s={decode_tok_s:.1f};"
             f"decode_tokens={out['decode_tokens']};"
             f"prefill_tokens={out['prefill_tokens']};"
             f"completed={out['completed']};"

@@ -52,6 +52,24 @@ if grep -rnE "^[^#]*(import|from)[^#]*mma_attention" src/repro/models --include=
 fi
 echo "attn-is-an-op-class OK"
 
+# Pack once, never per call: the lowering dispatch hot path must not
+# relayout weight operands.  Packed->natural conversions route through
+# core/packing.py's demote/refresh helpers only (never raw .unpack()/
+# pack_* in core/lowering.py), and the kernels consume packed panels via
+# BlockSpec index maps — no transpose/swapaxes of an operand per call.
+if grep -nE "\.unpack\(|pack_gemm\(|pack_conv\(" src/repro/core/lowering.py; then
+    echo "FAIL: per-call weight relayout in core/lowering.py — packed" \
+         "operands demote via packing.demote_op/refresh_* only" >&2
+    exit 1
+fi
+if grep -nE "jnp\.transpose\(|swapaxes\(" \
+        src/repro/kernels/mma_gemm.py src/repro/kernels/mma_conv.py; then
+    echo "FAIL: operand transpose inside the GEMM/conv kernels — layout" \
+         "changes are paid once at pack time (core/packing.py)" >&2
+    exit 1
+fi
+echo "pack-once-no-per-call-relayout OK"
+
 echo "== tier-1 tests =="
 # tests/conftest.py escalates the deprecated shims' DeprecationWarnings to
 # errors for in-repo (repro.*) callers.
@@ -67,8 +85,8 @@ timeout 180 python -m repro.launch.serve --arch mamba2-130m \
     --batch 2 --prompt-len 8 --gen 6 --requests 4 --fault-matrix
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
-    echo "== dgemm benchmark smoke (<60s) =="
-    timeout 60 python -m benchmarks.run --only dgemm --json BENCH_dgemm.json
+    echo "== dgemm benchmark smoke (<120s) =="
+    timeout 120 python -m benchmarks.run --only dgemm --json BENCH_dgemm.json
     python - <<'EOF'
 import json
 blob = json.load(open("BENCH_dgemm.json"))
@@ -85,6 +103,13 @@ for n in (128, 256):
     assert d["us_vmapped"] > 0 and d["us_grid_native"] > 0, (n, d)
     assert d["v5e_util_grid_native"] > d["v5e_util_vmapped"], (n, d)
 print("BENCH_dgemm.json OK: batched sweep tracks grid-native vs vmapped")
+for n in (128, 256):
+    d = rows[f"pgemm_N{n}"]
+    # the prepacked panel stream must be bitwise-identical to natural
+    # layout and both columns must be present (the pack-once contract).
+    assert d["bitwise_equal"] == 1, (n, d)
+    assert d["us_natural"] > 0 and d["us_packed"] > 0, (n, d)
+print("BENCH_dgemm.json OK: packed sweep bitwise-equal to natural layout")
 EOF
 
     echo "== attention benchmark smoke (<120s) =="
@@ -105,5 +130,23 @@ for s in (256, 512):
     b = rows[f"attnback_S{s}"]
     assert b["us_flash"] > 0 and b["us_chunked_xla"] > 0, (s, b)
 print("BENCH_attention.json OK: bounded grid < full grid on every S")
+EOF
+
+    echo "== serving benchmark smoke (<300s) =="
+    timeout 300 python -m benchmarks.run --only serving \
+        --json BENCH_serving.json
+    python - <<'EOF'
+import json
+blob = json.load(open("BENCH_serving.json"))
+rows = {r["name"]: r["derived"] for r in blob["benchmarks"]}
+assert not blob["failed"], blob["failed"]
+for name in ("serve_decode", "serve_guarded", "serve_prepacked"):
+    d = rows[name]
+    # every row reports steady-state decode throughput and completes the
+    # full request set; the prepacked run must not drop or corrupt work.
+    assert d["decode_tok_s"] > 0, (name, d)
+    assert d["completed"] == 8, (name, d)
+    assert d["decode_tokens"] > 0, (name, d)
+print("BENCH_serving.json OK: prepacked serving completes with live decode tok/s")
 EOF
 fi

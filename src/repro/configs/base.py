@@ -63,6 +63,9 @@ class ArchConfig:
 
     # --- vlm ---
     vision_prefix: int = 0           # leading positions fed by patch embeds
+    patch_size: int = 0              # vision stem: square patch edge (the
+                                     # CONV2D stem runs kernel=stride=patch)
+    image_channels: int = 3          # vision stem input channels
 
     # --- norm / embeddings ---
     norm: str = "rmsnorm"            # rmsnorm | layernorm
@@ -99,6 +102,17 @@ class ArchConfig:
         if self.frontend_stub or not self.is_enc_dec:
             return seq
         return -(-seq // 2)
+
+    def vision_grid(self) -> tuple[int, int]:
+        """(rows, cols) patch grid covering ``vision_prefix`` positions —
+        the nearest-square factorization, so 1024 -> 32x32 and the reduced
+        config's 8 -> 2x4.  Images into the patch-embed stem are
+        (B, rows * patch_size, cols * patch_size, image_channels)."""
+        vp = self.vision_prefix
+        gh = max(1, int(vp ** 0.5))
+        while vp % gh:
+            gh -= 1
+        return gh, vp // gh
 
     @property
     def supports_long_context(self) -> bool:
@@ -155,6 +169,11 @@ class ArchConfig:
             if not self.frontend_stub:
                 # conv stem: k3 (n_mels -> d) + k3 s2 (d -> d), with biases
                 n += 3 * self.n_mels * d + d + 3 * d * d + d
+        if self.vision_prefix:
+            n += d * d                       # vision_proj
+            if not self.frontend_stub and self.patch_size:
+                # patch-embed stem: (ps, ps, C) -> d conv, with bias
+                n += self.patch_size ** 2 * self.image_channels * d + d
         return n
 
     def active_param_count(self) -> int:
@@ -204,5 +223,6 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
         encoder_layers=min(cfg.encoder_layers, 2),
         decoder_len=16 if cfg.is_enc_dec else cfg.decoder_len,
         vision_prefix=8 if cfg.vision_prefix else 0,
+        patch_size=4 if cfg.patch_size else 0,
         mrope_sections=(4, 6, 6) if cfg.mrope else cfg.mrope_sections,
     )

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import precision
+from repro.core import packing as _packing
 from repro.runtime import faults as _faults
 
 Ger = precision.Ger
@@ -563,15 +564,21 @@ class Op:
                 arr = jnp.transpose(arr, perm)
             return arr
 
-        x2 = arrange(x, p.x_labels, p.batch + p.x_free + p.contract)
-        y2 = arrange(y, p.y_labels, p.batch + p.contract + p.y_free)
         batched = bool(p.batch)
-        if batched:
-            x2 = x2.reshape(b, m, k)
-            y2 = y2.reshape(b, k, n)
-        else:
-            x2 = x2.reshape(m, k)
-            y2 = y2.reshape(k, n)
+
+        def norm(arr, labels, order, shape):
+            if _packing.is_packed(arr):
+                # Prepacked operand: already in the kernel-native tiled
+                # layout (orientation validated at dispatch admission) —
+                # normalization is exactly the per-call relayout the pack
+                # paid once, so it is skipped.
+                return arr
+            return arrange(arr, labels, order).reshape(shape)
+
+        x2 = norm(x, p.x_labels, p.batch + p.x_free + p.contract,
+                  (b, m, k) if batched else (m, k))
+        y2 = norm(y, p.y_labels, p.batch + p.contract + p.y_free,
+                  (b, k, n) if batched else (k, n))
 
         def assemble(out):
             out = out.reshape(bshape + mshape + nshape)
@@ -611,12 +618,16 @@ def _combine_expanded(op: Op, prod, acc_seed, residual):
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "block", "interpret", "out_dtype", "epilogue", "neg_product",
-    "neg_acc", "alpha", "beta"))
+    "neg_acc", "alpha", "beta", "x_layout", "y_layout"))
 def _pallas_gemm_impl(x, y, c, bias, residual, xmask, ymask, pmask, *,
                       kind, block, interpret, out_dtype, epilogue,
-                      neg_product, neg_acc, alpha, beta):
+                      neg_product, neg_acc, alpha, beta,
+                      x_layout=None, y_layout=None):
     from repro.kernels import mma_gemm as _gemm
     pol = precision.policy(kind)
+    # Packed operands arrive as their raw tile arrays; the elementwise
+    # policy cast commutes with tiling, so the values the kernel reads
+    # match the natural path bit for bit.
     x = x.astype(pol.x_dtype) if not pol.packed_int4 else x
     y = y.astype(pol.y_dtype) if not pol.packed_int4 else y
     ep = epilogue if epilogue is not None and not epilogue.is_identity \
@@ -627,7 +638,8 @@ def _pallas_gemm_impl(x, y, c, bias, residual, xmask, ymask, pmask, *,
                           neg_product=neg_product, neg_acc=neg_acc,
                           alpha=alpha, beta=beta,
                           ep=ep, bias=bias, residual=residual, masks=masks,
-                          out_dtype=out_dtype, interpret=interpret)
+                          out_dtype=out_dtype, interpret=interpret,
+                          x_layout=x_layout, y_layout=y_layout)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -665,8 +677,23 @@ def _lower_pallas_gemm(op: Op):
     into the same kernel as VMEM operands."""
     x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
     pack = 2 if op.pol.packed_int4 else 1
-    block = resolve_block(op.ger, m, n, k * pack, op.block,
-                          op.epilogue.key, b=b or 1)
+    xl = yl = None
+    if _packing.is_packed(x2):
+        x2, xl = _packing.refresh_gemm(
+            x2, kind=op.ger, m=m, n=n, k=k * pack, b=b or 1,
+            epilogue_key=op.epilogue.key, explicit_block=op.block)
+    if _packing.is_packed(y2):
+        y2, yl = _packing.refresh_gemm(
+            y2, kind=op.ger, m=m, n=n, k=k * pack, b=b or 1,
+            epilogue_key=op.epilogue.key, explicit_block=op.block)
+    lay = yl if yl is not None else xl
+    if lay is not None:
+        # Fresh (or just-repacked) layout: its block config IS the
+        # dispatch block — the kernel streams the packed panels directly.
+        block = lay.block
+    else:
+        block = resolve_block(op.ger, m, n, k * pack, op.block,
+                              op.epilogue.key, b=b or 1)
     passes = _passes(op.ger, x2, y2)
     xm, ym, pm = op.masks if op.masks is not None else (None, None, None)
 
@@ -687,7 +714,8 @@ def _lower_pallas_gemm(op: Op):
             neg_product=op.neg_product and forms,
             neg_acc=op.neg_acc and forms,
             alpha=op.alpha if forms else 1.0,
-            beta=op.beta if forms else 1.0)
+            beta=op.beta if forms else 1.0,
+            x_layout=xl, y_layout=yl)
 
     if len(passes) == 1:
         xi, yi, kind = passes[0]
@@ -715,6 +743,7 @@ def _lower_xla_gemm(op: Op):
     """SPMD path: no normalization — batch labels become dot_general batch
     dims on the original operands, so the partitioner sees the same
     contraction ``jnp.einsum`` would have built and shards it unchanged."""
+    op = _packing.demote_op(op, "xla-gemm")
     p = op.parsed
     _sizes(p, op.x, op.y)     # label-consistency check
     passes = _passes(op.ger, op.x, op.y)
@@ -755,6 +784,7 @@ def _lower_xla_masked(op: Op):
     layout, so the masks name the trailing axes directly) and the plain
     gemm lowering runs unchanged — XLA fuses the selects into the dot's
     operand reads."""
+    op = _packing.demote_op(op, "xla-masked")
     x2, y2 = _fold_masks(op.x, op.y, op.masks)
     return _lower_xla_gemm(dataclasses.replace(op, x=x2, y=y2, masks=None))
 
@@ -784,6 +814,7 @@ def _lower_ref_gemm(op: Op):
     predicates into the normalized operands (= the pm_ger oracle's
     semantics at matrix granularity)."""
     from repro.kernels import ref as _ref
+    op = _packing.demote_op(op, "ref-gemm")
     x2, y2, (b, m, n, k), assemble = op.to_batched_2d()
     if op.masks is not None:
         x2, y2 = _fold_masks(x2, y2, op.masks)
@@ -904,14 +935,22 @@ def _conv_norm(op: Op):
     """
     nd, depthwise = _CONV_SPECS[op.spec]
     x, w = op.x, op.y
+    packed_w = _packing.is_packed(w)
     if nd == 1:
         x = x[:, None]                           # (N, 1, L, C)
-        w = w[None]                              # (1, KW, C[, F])
+        if not packed_w:
+            w = w[None]                          # (1, KW, C[, F])
         strides = (1,) + op.stride
     else:
         strides = op.stride
-    kh, kw = w.shape[0], w.shape[1]
-    c = w.shape[2]
+    if packed_w:
+        # Prepacked filter bank (1-D layouts already carry the size-1 KH
+        # axis): geometry comes from the layout, the tile stream flows
+        # through to the kernel untouched.
+        kh, kw, c = w.layout.kh, w.layout.kw, w.layout.c
+    else:
+        kh, kw = w.shape[0], w.shape[1]
+        c = w.shape[2]
     if x.shape[-1] != c:
         raise ValueError(f"conv channel mismatch: image {x.shape} vs "
                          f"filter {w.shape}")
@@ -983,6 +1022,7 @@ def _xla_conv_impl(x, w, bias, residual, *, kind, strides, depthwise,
 
 @register("xla", "conv")
 def _lower_xla_conv(op: Op):
+    op = _packing.demote_op(op, "xla-conv")
     x4, w4, strides, depthwise, squeeze = _conv_norm(op)
     return _xla_conv_impl(
         x4, w4, op.bias, op.residual, kind=op.ger, strides=strides,
@@ -992,9 +1032,10 @@ def _lower_xla_conv(op: Op):
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "bf", "strides", "interpret", "out_dtype", "epilogue",
-    "squeeze"))
+    "squeeze", "w_layout"))
 def _pallas_conv_impl(x, w, bias, residual, *, kind, bf, strides,
-                      interpret, out_dtype, epilogue, squeeze):
+                      interpret, out_dtype, epilogue, squeeze,
+                      w_layout=None):
     from repro.kernels import epilogue as _epilogue
     from repro.kernels import mma_conv as _conv
     pol = precision.policy(kind)
@@ -1008,8 +1049,12 @@ def _pallas_conv_impl(x, w, bias, residual, *, kind, bf, strides,
             xi.astype(pk.x_dtype), wi.astype(pk.y_dtype), bf=bf,
             stride=strides,
             out_dtype=out_dtype if out_dtype is not None else pol.acc_dtype,
-            ep=ep, bias=bias, residual=residual, interpret=interpret)
+            ep=ep, bias=bias, residual=residual, interpret=interpret,
+            w_layout=w_layout)
         return out[:, 0] if squeeze else out
+    if w_layout is not None:      # execute() demotes packed expansion gers
+        raise ValueError("prepacked filters do not compose with expansion "
+                         "chains; demote via packing.demote_op first")
     # Expansion chain (F32GER_3XBF16): conv is bilinear, so the hi/lo
     # split passes sum over one accumulator; the epilogue then applies
     # once on the chained product (mirrors the gemm expansion tail).
@@ -1082,6 +1127,21 @@ def _lower_pallas_conv(op: Op):
             bc=op.block[1] if op.block is not None else None,
             strides=strides, interpret=op.interpret,
             out_dtype=op.out_dtype, epilogue=op.epilogue, squeeze=squeeze)
+    if _packing.is_packed(w4):
+        lay0 = w4.layout
+        kh, kw, c, f = lay0.kh, lay0.kw, lay0.c, lay0.f
+        ow = (x4.shape[2] - kw) // strides[1] + 1
+        w4, lay = _packing.refresh_conv(
+            w4, kind=op.ger, ow=ow, f=f, kwc=kw * c,
+            epilogue_key=op.epilogue.key, explicit_block=op.block)
+        if lay is not None:
+            return _pallas_conv_impl(
+                x4, w4, op.bias, res, kind=op.ger, bf=lay.bf,
+                strides=strides, interpret=op.interpret,
+                out_dtype=op.out_dtype, epilogue=op.epilogue,
+                squeeze=squeeze, w_layout=lay)
+        # stale under trace: w4 is the demoted natural filter — fall
+        # through to the natural dispatch below
     kh, kw, c, f = w4.shape
     ow = (x4.shape[2] - kw) // strides[1] + 1
     # Best-effort autotune-cache reuse: the panel dot is (OW, KW*C) x
@@ -1102,6 +1162,7 @@ def _lower_ref_conv(op: Op):
     Expansion hooks chain per-pass like the gemm oracle."""
     from repro.kernels import epilogue as _epilogue
     from repro.kernels import ref as _ref
+    op = _packing.demote_op(op, "ref-conv")
     x4, w4, strides, depthwise, squeeze = _conv_norm(op)
     pol = op.pol
     out = None
@@ -1514,6 +1575,73 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
 
 
 # ----------------------------------------------------------------------
+# Packed-operand admission: which operands may stay in their prepacked
+# tile layout for this dispatch (core/packing.py owns the layouts; this
+# layer only reads descriptor metadata and routes ineligible operands
+# through the sanctioned packing demotion helpers)
+# ----------------------------------------------------------------------
+
+def _packed_gemm_compatible(parsed, v, side: str) -> bool:
+    """A packed GEMM operand is admissible when the spec's normalization
+    of that operand is exactly the relayout its pack already paid: single
+    contract label, single free label on the packed side, at most one
+    batch label, and a label order matching the layout's orientation."""
+    lay = v.layout
+    if getattr(lay, "tile", None) != "gemm" or lay.side != side:
+        return False
+    p = parsed
+    if p is None or len(p.contract) != 1 or len(p.batch) > 1:
+        return False
+    free = p.x_free if side == "x" else p.y_free
+    if len(free) != 1 or lay.batched != bool(p.batch):
+        return False
+    labels = p.x_labels if side == "x" else p.y_labels
+    if side == "x":
+        natural = p.batch + free + p.contract
+        flipped = p.batch + p.contract + free
+    else:
+        natural = p.batch + p.contract + free
+        flipped = p.batch + free + p.contract
+    return labels == (flipped if lay.transposed else natural)
+
+
+def _admit_packed(op_class: str, backend: str, ger: Ger, pol, parsed,
+                  spec: str, x, y, masks):
+    """Demote packed operands that cannot ride this dispatch packed.
+
+    The packed fast path is the single-pass Pallas gemm/conv kernel;
+    everything else — xla/ref backends, masked/saturating/complex/attn/
+    einsum classes, expansion chains, int4 nibble kinds, incompatible
+    spec orientations — demotes here, exactly once, through the
+    sanctioned ``packing.demote_value``."""
+    pallas_ok = (backend == "pallas" and not pol.packed_int4
+                 and expansion_for(ger) is None)
+    if op_class == "gemm" and pallas_ok and masks is None:
+        if _packing.is_packed(x) and _packing.is_packed(y):
+            # one packed operand per dispatch: keep the weight-side y
+            x = _packing.demote_value(x, "both-operands-packed")
+        if _packing.is_packed(x) and not _packed_gemm_compatible(
+                parsed, x, "x"):
+            x = _packing.demote_value(x, "spec-orientation")
+        if _packing.is_packed(y) and not _packed_gemm_compatible(
+                parsed, y, "y"):
+            y = _packing.demote_value(y, "spec-orientation")
+        return x, y
+    if op_class == "conv" and pallas_ok:
+        if _packing.is_packed(x):
+            x = _packing.demote_value(x, "conv-image-operand")
+        if _packing.is_packed(y):
+            nd, depthwise = _CONV_SPECS[spec]
+            lay = y.layout
+            if (depthwise or getattr(lay, "tile", None) != "conv"
+                    or lay.nd != nd):
+                y = _packing.demote_value(y, "conv-layout-mismatch")
+        return x, y
+    return (_packing.demote_value(x, op_class),
+            _packing.demote_value(y, op_class))
+
+
+# ----------------------------------------------------------------------
 # The driver
 # ----------------------------------------------------------------------
 
@@ -1712,6 +1840,16 @@ def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
         raise NotImplementedError(
             f"no lowering registered for ({backend!r}, {op_class!r}, "
             f"{ger}, fused={not ep.is_identity})")
+
+    x, y = _admit_packed(op_class, backend, ger, pol, parsed, spec,
+                         x, y, masks)
+    # acc/bias/residual/z are never packed operands; unwrap defensively so
+    # a mis-routed descriptor degrades to natural layout instead of
+    # crashing a lowering.
+    z = _packing.demote_value(z, "attn-value") if _packing.is_packed(z) \
+        else z
+    acc = _packing.demote_value(acc, "acc-seed") if _packing.is_packed(acc) \
+        else acc
 
     lowering_out_dtype = None if dequant is not None else out_dtype
     op = Op(x=x, y=y, acc=acc, bias=bias, residual=residual, parsed=parsed,

@@ -1,0 +1,637 @@
+"""Persistent prepacked operand layouts (ROADMAP direction 4).
+
+The MMA paper's throughput rests on operands arriving in the layout the
+rank-k instructions consume natively; Kuzma et al. (arXiv:2305.18236)
+show the same win at the compiler level by staging operands through
+*packed layers* keyed to the innermost kernel's tiling, and MX
+(arXiv:2401.04012) makes the ultra-low-overhead case for packed
+*quantized* tiles.  This module is that layer for the facility:
+
+  * :class:`PackedOperand` — a registered JAX pytree wrapping a weight in
+    its kernel-native tiled layout.  ``data`` holds the packed panels,
+    the frozen :class:`GemmLayout`/:class:`ConvLayout` aux records the
+    logical shape, tiling, and orientation, and optional ``scale`` /
+    ``col_sum`` children carry the int8 quantization metadata the
+    ``I8GER4`` Dequant deprime needs.  ``shape`` / ``ndim`` / ``dtype``
+    mirror the *caller's natural array*, so ``facility.contract`` spec
+    parsing and shape validation work unchanged, and leading (layer-stack
+    / expert-bank) axes survive ``lax.scan`` slicing because the aux
+    never encodes them.
+  * A **layout registry** (:func:`gemm_layout` / :func:`conv_layout`)
+    keyed by (op-class, backend, block config): the block is derived from
+    the autotune winner cache (``core/autotune.py``) so the pack matches
+    the tiling the kernel will actually run.
+  * **Pack once, persist, self-invalidate**: :func:`refresh_gemm` /
+    :func:`refresh_conv` are the dispatch-time freshness check.  A packed
+    layout is *fresh* while no explicit block and no autotune winner for
+    the live (b, m, n, k) key disagree with it; when the winner flips,
+    a concrete operand is repacked on the spot (``COUNTERS["repack"]``)
+    and a traced one demotes to natural layout (``COUNTERS["demote"]``)
+    — the stale layout is NEVER silently read.
+  * **Clean demotion**: :func:`demote_op` / :func:`demote_value` are the
+    only sanctioned packed -> natural conversions outside this module
+    (scripts/ci.sh lints ``core/lowering.py`` for stray ``unpack``/pack
+    calls), so the guarded-dispatch ladder (pallas -> xla -> ref) demotes
+    packed weights by unwrapping them exactly once at the rung boundary.
+  * :func:`prepack_params_for_serving` — the generalization of
+    ``quant.quantize_params_for_serving``: a name-aware pass over a model
+    parameter tree replacing dense weights, MoE expert banks, and conv
+    filter stacks with packed operands (optionally int8-quantized for the
+    I8GER4 serving fast path), applied at serve admission
+    (``launch/serve.py --prepack``) or model build.
+  * :class:`PackedStore` — a process-global store for packed *constant*
+    operands (the DFT twiddle matrices, ``kernels/blas3.py``), replacing
+    per-module private caches.
+
+Fringe contract: packed panels are zero-padded up to the block grid.
+The GEMM kernel's k-fringe mask and Pallas's dropped out-of-bounds
+stores make the padded region inert, so a packed dispatch is *bitwise
+equal* to the natural-layout dispatch at the same block config
+(tests/test_packing.py holds this on all three backends).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision, tiling
+
+Ger = precision.Ger
+
+# Observability: pack / repack / demote / store traffic.  Tests assert on
+# deltas (e.g. "a steady-state decode loop issues zero demotes and zero
+# new packs"); reset with ``COUNTERS.clear()``.
+COUNTERS: collections.Counter = collections.Counter()
+EVENTS: list[dict] = []          # pack/repack/demote log (tests/CI assert)
+
+
+def _record(event: str, **info):
+    COUNTERS[event] += 1
+    EVENTS.append({"event": event, **info})
+
+
+def clear_state() -> None:
+    COUNTERS.clear()
+    EVENTS.clear()
+    _LAYOUTS.clear()
+
+
+# ----------------------------------------------------------------------
+# Layout descriptors (frozen -> hashable -> valid jit static args)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmLayout:
+    """Tiled layout of one GEMM weight panel stream.
+
+    ``side`` names the normalized operand the weight plays: ``"y"`` is
+    the right (K, N) operand (dense / MoE weights), ``"x"`` the left
+    (M, K) operand (the quant path's signed-int8 weights, spec
+    ``"kn,mk->mn"``).  ``rows``/``cols`` are the *kernel-facing* logical
+    dims; ``transposed`` says the caller's natural array is their
+    transpose (the pack pays that transpose exactly once).  ``batched``
+    marks an expert-bank operand whose leading axis is the kernel's
+    batch grid dimension.
+
+    Physical ``data`` layout (leading layer-stack/batch axes elided):
+
+        side "y":  (gn, gk, bk, bn)   — panel-major: the K-panels of one
+                                        N-column block are contiguous
+        side "x":  (gm, gk, bm, bk)
+    """
+
+    kind: Ger
+    block: tuple[int, int, int]       # (bm, bn, bk) — the pack's tiling
+    side: str                         # "x" | "y"
+    rows: int                         # kernel-facing rows (k for y, m for x)
+    cols: int                         # kernel-facing cols (n for y, k for x)
+    transposed: bool = False
+    batched: bool = False
+
+    tile: typing.ClassVar[str] = "gemm"
+    tile_rank: typing.ClassVar[int] = 4
+
+    @property
+    def caller_shape(self) -> tuple[int, int]:
+        return ((self.cols, self.rows) if self.transposed
+                else (self.rows, self.cols))
+
+    @property
+    def panel_blocks(self) -> tuple[int, int]:
+        """(block rows, block cols) of one packed panel."""
+        bm, bn, bk = self.block
+        return (bk, bn) if self.side == "y" else (bm, bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayout:
+    """Tiled layout of one conv filter bank: ``(gf, KH, KW, C, bf)`` —
+    the F axis blocked by the kernel's ``bf`` tile so each grid step
+    streams one ``(1, KW, C, bf)``-equivalent packed slab straight into
+    VMEM.  1-D specs (``nd == 1``) pack with a size-1 KH axis, matching
+    the conv normalizer's padded NHWC x HWIO form."""
+
+    kind: Ger
+    bf: int
+    kh: int
+    kw: int
+    c: int
+    f: int
+    nd: int = 2                       # spatial ndim of the caller's spec
+
+    tile: typing.ClassVar[str] = "conv"
+    tile_rank: typing.ClassVar[int] = 5
+
+    @property
+    def caller_shape(self) -> tuple[int, ...]:
+        if self.nd == 1:
+            return (self.kw, self.c, self.f)
+        return (self.kh, self.kw, self.c, self.f)
+
+
+# ----------------------------------------------------------------------
+# PackedOperand: the descriptor the facility accepts in place of a weight
+# ----------------------------------------------------------------------
+
+class PackedOperand:
+    """A weight persisted in its kernel-native tiled layout.
+
+    Ducks the array introspection surface ``facility.contract`` uses
+    (``shape``/``ndim``/``dtype`` mirror the caller's natural array, so
+    spec parsing and label-size validation never see the packing) and is
+    a registered pytree, so it flows through ``jax.jit``, ``lax.scan``
+    layer stacks (leading axes are sliced off ``data`` while the layout
+    aux is untouched), and parameter-tree maps.
+    """
+
+    __slots__ = ("data", "layout", "scale", "col_sum")
+
+    def __init__(self, data, layout, scale=None, col_sum=None):
+        self.data = data
+        self.layout = layout
+        self.scale = scale            # (1, N) fp32 — int8 weight scales
+        self.col_sum = col_sum        # (N,) fp32 — Dequant column sums
+
+    # ---- the array-introspection surface -----------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (tuple(self.data.shape[:-self.layout.tile_rank])
+                + self.layout.caller_shape)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def quantized(self) -> bool:
+        return self.scale is not None
+
+    def astype(self, dt) -> "PackedOperand":
+        """Elementwise cast commutes with tiling, so the ger-policy cast
+        models apply to natural weights lands on identical values."""
+        if jnp.dtype(dt) == self.data.dtype:
+            return self
+        if self.quantized:
+            raise ValueError(
+                "refusing to cast a packed-quantized (int8) operand; "
+                "route it through quant.qdot's I8GER4 Dequant plan")
+        return PackedOperand(self.data.astype(dt), self.layout,
+                             self.scale, self.col_sum)
+
+    # ---- pack <-> natural --------------------------------------------
+    def unpack(self) -> jnp.ndarray:
+        """Reconstruct the caller's natural-layout array (exact: inverse
+        tile transpose, fringe padding sliced away, orientation undone)."""
+        lay, data = self.layout, self.data
+        if lay.tile == "conv":
+            return _unpack_conv(data, lay)
+        return _unpack_gemm(data, lay)
+
+    def __repr__(self):
+        return (f"PackedOperand(shape={self.shape}, dtype={self.dtype}, "
+                f"layout={self.layout!r})")
+
+
+def _po_flatten(po: PackedOperand):
+    return (po.data, po.scale, po.col_sum), po.layout
+
+
+def _po_unflatten(layout, children):
+    data, scale, col_sum = children
+    return PackedOperand(data, layout, scale, col_sum)
+
+
+jax.tree_util.register_pytree_node(PackedOperand, _po_flatten, _po_unflatten)
+
+
+def is_packed(v) -> bool:
+    return isinstance(v, PackedOperand)
+
+
+# ----------------------------------------------------------------------
+# Pack / unpack transforms
+# ----------------------------------------------------------------------
+
+def pack_gemm(w, layout: GemmLayout, *, scale=None,
+              col_sum=None) -> PackedOperand:
+    """Pack a GEMM weight into ``layout`` (pays any transpose ONCE).
+
+    Leading axes beyond the trailing 2-D matrix (layer stacks, expert
+    banks) are carried through untouched, ahead of the packed tile axes.
+    Fringes are zero-padded up to the block grid — inert by the kernels'
+    fringe contract, so pack -> dispatch is bitwise-equal to natural.
+    """
+    pol = precision.policy(layout.kind)
+    if pol.packed_int4:
+        raise ValueError("packed-int4 kinds keep their own nibble packing; "
+                         "the layout subsystem packs byte-addressable tiles")
+    w = jnp.asarray(w)
+    if w.ndim < 2 or tuple(w.shape[-2:]) != layout.caller_shape:
+        raise ValueError(f"operand {w.shape} does not end in the layout's "
+                         f"natural shape {layout.caller_shape}")
+    if layout.batched and w.ndim < 3:
+        raise ValueError(f"batched layout wants a leading batch axis; "
+                         f"got {w.shape}")
+    w2 = jnp.swapaxes(w, -1, -2) if layout.transposed else w
+    rows, cols = layout.rows, layout.cols
+    br, bc = layout.panel_blocks
+    gr, gc = -(-rows // br), -(-cols // bc)
+    lead = w2.ndim - 2
+    pr, pc = gr * br - rows, gc * bc - cols
+    if pr or pc:
+        w2 = jnp.pad(w2, [(0, 0)] * lead + [(0, pr), (0, pc)])
+    t = w2.reshape(w2.shape[:lead] + (gr, br, gc, bc))
+    head = tuple(range(lead))
+    if layout.side == "y":          # (gn, gk, bk, bn): panel-major
+        data = jnp.transpose(t, head + (lead + 2, lead + 0,
+                                        lead + 1, lead + 3))
+    else:                           # (gm, gk, bm, bk)
+        data = jnp.transpose(t, head + (lead + 0, lead + 2,
+                                        lead + 1, lead + 3))
+    _record("pack", tile="gemm", side=layout.side, block=layout.block,
+            shape=tuple(w.shape))
+    return PackedOperand(data, layout, scale=scale, col_sum=col_sum)
+
+
+def _unpack_gemm(data, lay: GemmLayout):
+    lead = data.ndim - 4
+    head = tuple(range(lead))
+    if lay.side == "y":
+        t = jnp.transpose(data, head + (lead + 1, lead + 2,
+                                        lead + 0, lead + 3))
+    else:
+        t = jnp.transpose(data, head + (lead + 0, lead + 2,
+                                        lead + 1, lead + 3))
+    gr, br, gc, bc = t.shape[lead:]
+    w2 = t.reshape(t.shape[:lead] + (gr * br, gc * bc))
+    w2 = w2[..., :lay.rows, :lay.cols]
+    return jnp.swapaxes(w2, -1, -2) if lay.transposed else w2
+
+
+def pack_conv(w, layout: ConvLayout) -> PackedOperand:
+    """Pack a conv filter bank into the ``(gf, KH, KW, C, bf)`` stream."""
+    w = jnp.asarray(w)
+    want = layout.caller_shape
+    if w.ndim < len(want) or tuple(w.shape[-len(want):]) != want:
+        raise ValueError(f"filter {w.shape} does not end in the layout's "
+                         f"natural shape {want}")
+    if layout.nd == 1:
+        w = jnp.expand_dims(w, -4)          # (..., 1, KW, C, F)
+    lead = w.ndim - 4
+    gf = -(-layout.f // layout.bf)
+    pf = gf * layout.bf - layout.f
+    if pf:
+        w = jnp.pad(w, [(0, 0)] * (lead + 3) + [(0, pf)])
+    t = w.reshape(w.shape[:lead + 3] + (gf, layout.bf))
+    head = tuple(range(lead))
+    data = jnp.transpose(t, head + (lead + 3, lead + 0, lead + 1,
+                                    lead + 2, lead + 4))
+    _record("pack", tile="conv", bf=layout.bf, shape=tuple(w.shape))
+    return PackedOperand(data, layout)
+
+
+def _unpack_conv(data, lay: ConvLayout):
+    lead = data.ndim - 5
+    head = tuple(range(lead))
+    t = jnp.transpose(data, head + (lead + 1, lead + 2, lead + 3,
+                                    lead + 0, lead + 4))
+    gf, bf = t.shape[lead + 3:]
+    w = t.reshape(t.shape[:lead + 3] + (gf * bf,))[..., :lay.f]
+    if lay.nd == 1:
+        w = jnp.squeeze(w, axis=-4)
+    return w
+
+
+def repack(po: PackedOperand, layout) -> PackedOperand:
+    """Re-derive a packed operand under a new layout (winner flipped)."""
+    w = po.unpack()
+    if layout.tile == "conv":
+        return pack_conv(w, layout)
+    # re-count as repack, not a fresh pack
+    out = pack_gemm(w, layout, scale=po.scale, col_sum=po.col_sum)
+    COUNTERS["pack"] -= 1
+    EVENTS[-1]["event"] = "repack"
+    COUNTERS["repack"] += 1
+    return out
+
+
+# ----------------------------------------------------------------------
+# Layout registry: (op-class, backend, block config) -> layout, with the
+# block derived from the autotune winner cache
+# ----------------------------------------------------------------------
+
+_LAYOUTS: dict[tuple, object] = {}
+
+
+def plan_gemm_block(kind: Ger, m: int, n: int, k: int, *, b: int = 1,
+                    epilogue_key: str = "none",
+                    block: tuple[int, int, int] | None = None
+                    ) -> tuple[int, int, int]:
+    """The block config a Pallas gemm dispatch at (b, m, n, k) would run:
+    explicit ``block`` wins, then the autotune winner, else the
+    ``choose_blocks`` heuristic (``m`` is the caller's hint for the
+    activation rows the weight will meet — decode batch, typically)."""
+    from repro.core import lowering as _lowering
+    blk = _lowering.resolve_block(kind, m, n, k, block, epilogue_key, b=b)
+    if blk is None:
+        cfg = tiling.choose_blocks(m, n, k, _lowering.rep_kind(kind))
+        blk = (cfg.bm, cfg.bn, cfg.bk)
+    return tuple(blk)
+
+
+def gemm_layout(kind: Ger, m: int, n: int, k: int, *, b: int = 1,
+                side: str = "y", transposed: bool = False,
+                batched: bool = False, epilogue_key: str = "none",
+                backend: str = "pallas",
+                block: tuple[int, int, int] | None = None) -> GemmLayout:
+    """Registry lookup: the kernel-native layout for a GEMM weight."""
+    blk = plan_gemm_block(kind, m, n, k, b=b, epilogue_key=epilogue_key,
+                          block=block)
+    rows, cols = (k, n) if side == "y" else (m, k)
+    key = ("gemm", backend, blk, kind.value, side, transposed, batched,
+           rows, cols)
+    lay = _LAYOUTS.get(key)
+    if lay is None:
+        lay = GemmLayout(kind=kind, block=blk, side=side, rows=rows,
+                         cols=cols, transposed=transposed, batched=batched)
+        _LAYOUTS[key] = lay
+    return lay
+
+
+def conv_layout(kind: Ger, kh: int, kw: int, c: int, f: int, *,
+                nd: int = 2, ow_hint: int = 128,
+                epilogue_key: str = "none", backend: str = "pallas",
+                bf: int | None = None) -> ConvLayout:
+    """Registry lookup: the kernel-native layout for a conv filter bank.
+    The panel dot is (OW, KW*C) x (KW*C, bf), so the gemm winner cache is
+    consulted at that shape; only the N-tile (bf) applies."""
+    if bf is None:
+        from repro.core import lowering as _lowering
+        blk = _lowering.resolve_block(kind, ow_hint, f, kw * c, None,
+                                      epilogue_key)
+        bf = blk[1] if blk is not None else min(f, 128)
+    key = ("conv", backend, bf, kind.value, kh, kw, c, f, nd)
+    lay = _LAYOUTS.get(key)
+    if lay is None:
+        lay = ConvLayout(kind=kind, bf=bf, kh=kh, kw=kw, c=c, f=f, nd=nd)
+        _LAYOUTS[key] = lay
+    return lay
+
+
+# ----------------------------------------------------------------------
+# Dispatch-time freshness: pack-once / invalidate-on-retune
+# ----------------------------------------------------------------------
+
+def refresh_gemm(po: PackedOperand, *, kind: Ger, m: int, n: int, k: int,
+                 b: int = 1, epilogue_key: str = "none",
+                 explicit_block=None):
+    """Freshness check at dispatch.  Returns ``(data, layout)``:
+
+      * fresh (no explicit block / winner disagrees) -> the packed panels
+        and their layout, untouched — the pack-once steady state;
+      * stale + concrete -> repacked on the spot under the new block
+        (never silently reads the old layout);
+      * stale + traced (inside jit, host repack impossible) -> demotes:
+        ``(natural array, None)``.
+    """
+    lay = po.layout
+    from repro.core import lowering as _lowering
+    resolved = _lowering.resolve_block(kind, m, n, k, explicit_block,
+                                       epilogue_key, b=b)
+    if resolved is None or tuple(resolved) == lay.block:
+        return po.data, lay
+    if isinstance(po.data, jax.core.Tracer):
+        _record("demote", why="stale-under-trace", have=lay.block,
+                want=tuple(resolved))
+        return po.unpack(), None
+    new = dataclasses.replace(lay, block=tuple(resolved))
+    fresh = repack(po, new)
+    _record("invalidate", have=lay.block, want=tuple(resolved))
+    return fresh.data, fresh.layout
+
+
+def refresh_conv(po: PackedOperand, *, kind: Ger, ow: int, f: int,
+                 kwc: int, epilogue_key: str = "none", explicit_block=None):
+    """Conv analogue of :func:`refresh_gemm` (only the bf tile applies)."""
+    lay = po.layout
+    from repro.core import lowering as _lowering
+    resolved = _lowering.resolve_block(kind, ow, f, kwc, explicit_block,
+                                       epilogue_key)
+    if resolved is None or resolved[1] == lay.bf:
+        return po.data, lay
+    if isinstance(po.data, jax.core.Tracer):
+        _record("demote", why="stale-under-trace", have=lay.bf,
+                want=resolved[1])
+        return po.unpack(), None
+    new = dataclasses.replace(lay, bf=resolved[1])
+    fresh = repack(po, new)
+    _record("invalidate", have=lay.bf, want=resolved[1])
+    return fresh.data, fresh.layout
+
+
+# ----------------------------------------------------------------------
+# Demotion: the ONE sanctioned packed -> natural conversion for dispatch
+# ----------------------------------------------------------------------
+
+def demote_value(v, why: str = "backend"):
+    """Unpack a packed operand for a lowering that wants natural layout
+    (xla/ref rungs, unsupported op-classes).  Counted: a steady-state
+    packed fast path must never pass through here."""
+    if isinstance(v, PackedOperand):
+        _record("demote", why=why)
+        return v.unpack()
+    return v
+
+
+def demote_op(op, why: str = "backend"):
+    """Demote every packed operand of a resolved Op in one step — the
+    guarded ladder's packed -> natural rung boundary."""
+    repl = {}
+    for field in ("x", "y", "acc", "bias", "residual", "z"):
+        v = getattr(op, field)
+        if isinstance(v, PackedOperand):
+            repl[field] = demote_value(v, why)
+    return dataclasses.replace(op, **repl) if repl else op
+
+
+# ----------------------------------------------------------------------
+# PackedStore: persistent packed constants (DFT twiddles, ...)
+# ----------------------------------------------------------------------
+
+class PackedStore:
+    """Process-global store for packed constant operands, keyed by the
+    caller's (name, shape, dtype, block-config) tuple — the facility-wide
+    replacement for per-module private caches (``blas3._twiddle``'s old
+    ``lru_cache``).  ``invalidate`` drops entries when a layout key's
+    winner changes, so the constant is re-derived, never read stale."""
+
+    def __init__(self):
+        self._entries: dict[tuple, object] = {}
+
+    def get_or_build(self, key: tuple, builder):
+        hit = self._entries.get(key)
+        if hit is None:
+            _record("store_build", key=key)
+            hit = builder()
+            self._entries[key] = hit
+        else:
+            COUNTERS["store_hit"] += 1
+        return hit
+
+    def invalidate(self, key: tuple | None = None) -> int:
+        """Drop one entry (or every entry whose key starts with ``key``);
+        ``None`` clears the store.  Returns the number dropped."""
+        if key is None:
+            n = len(self._entries)
+            self._entries.clear()
+            return n
+        drop = [k for k in self._entries
+                if k == key or k[:len(key)] == key]
+        for k in drop:
+            del self._entries[k]
+        return len(drop)
+
+    def __len__(self):
+        return len(self._entries)
+
+    def keys(self):
+        return list(self._entries)
+
+
+STORE = PackedStore()
+
+
+# ----------------------------------------------------------------------
+# prepack_params_for_serving: the model-tree pass
+# ----------------------------------------------------------------------
+
+# Leaves that must stay natural: ``tok`` is consumed by an embedding
+# gather AND (tied) transposed by ``layers.logits`` — two orientations,
+# one array.
+_SKIP_NAMES = frozenset({"tok"})
+
+# Conv filter stacks by name -> spatial ndim (whisper's audio stem is
+# 1-D over frames; qwen2-vl's vision patch stem is a 2-D filter bank).
+_CONV_NAMES = {"conv1_w": 1, "conv2_w": 1, "patch_w": 2}
+
+# MoE expert banks: (E, d, f) weights whose E axis is the kernel's batch
+# grid dimension (specs "ecd,edf->ecf" / "ecf,efd->ecd").
+_MOE_NAMES = frozenset({"w1", "w2", "w3"})
+
+_PACKABLE_DTYPES = (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+                    jnp.dtype(jnp.float16))
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            out.append(k)
+    return out
+
+
+def prepack_params_for_serving(params, *, kind: Ger | None = None,
+                               min_size: int = 1 << 16, m_hint: int = 8,
+                               quantize: bool = False,
+                               epilogue_key: str = "none"):
+    """Replace weight leaves with :class:`PackedOperand` descriptors.
+
+    The generalization of ``quant.quantize_params_for_serving``: dense
+    >= ``min_size`` 2-D weights (stacked-layer leading axes included),
+    MoE expert banks, and named conv filter stacks are packed ONCE into
+    the layout the autotune winner cache implies for ``m_hint``
+    activation rows (the serving batch).  ``quantize=True`` additionally
+    int8-quantizes plain 2-D dense weights and packs them X-side in the
+    ``quant.qdot`` orientation, with the per-column scales and Dequant
+    column sums riding the descriptor — the I8GER4 serving fast path.
+
+    Returns ``(packed_params, stats)`` where stats counts leaves per
+    category and the bytes now resident in packed layout.
+    """
+    if kind is None:
+        from repro.core import facility as _facility
+        kind = _facility.current().ger
+    stats = collections.Counter()
+
+    def visit(path, leaf):
+        names = _path_names(path)
+        last = names[-1] if names else ""
+        if (not hasattr(leaf, "ndim") or is_packed(leaf)
+                or last in _SKIP_NAMES):
+            return leaf
+        if last in _CONV_NAMES and leaf.ndim >= _CONV_NAMES[last] + 2:
+            nd = _CONV_NAMES[last]
+            if nd == 1:
+                kw, c, f = leaf.shape[-3:]
+                kh = 1
+            else:
+                kh, kw, c, f = leaf.shape[-4:]
+            lay = conv_layout(kind, kh, kw, c, f, nd=nd,
+                              epilogue_key=epilogue_key)
+            stats["conv"] += 1
+            stats["bytes"] += leaf.size * leaf.dtype.itemsize
+            return pack_conv(leaf, lay)
+        if leaf.dtype not in _PACKABLE_DTYPES:
+            return leaf
+        if ("moe" in names and last in _MOE_NAMES and leaf.ndim >= 3):
+            e, d, f = leaf.shape[-3:]
+            lay = gemm_layout(kind, m_hint, f, d, b=e, side="y",
+                              batched=True, epilogue_key=epilogue_key)
+            stats["moe"] += 1
+            stats["bytes"] += leaf.size * leaf.dtype.itemsize
+            return pack_gemm(leaf, lay)
+        if leaf.ndim >= 2:
+            k, n = leaf.shape[-2:]
+            if k * n < min_size:
+                return leaf
+            if quantize and leaf.ndim == 2 \
+                    and leaf.dtype == jnp.dtype(jnp.float32):
+                from repro.core import quant as _quant
+                q, scale = _quant.quantize_weight(leaf)
+                col_sum = q.astype(jnp.int32).sum(axis=0).astype(
+                    jnp.float32)
+                lay = gemm_layout(Ger.I8GER4, n, m_hint, k, side="x",
+                                  transposed=True,
+                                  epilogue_key=epilogue_key)
+                stats["quantized"] += 1
+                stats["bytes"] += q.size
+                return pack_gemm(q, lay, scale=scale, col_sum=col_sum)
+            lay = gemm_layout(kind, m_hint, n, k, side="y",
+                              epilogue_key=epilogue_key)
+            stats["dense"] += 1
+            stats["bytes"] += leaf.size * leaf.dtype.itemsize
+            return pack_gemm(leaf, lay)
+        return leaf
+
+    packed = jax.tree_util.tree_map_with_path(visit, params)
+    return packed, dict(stats)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import facility, lowering
+from repro.core import facility, lowering, packing
 from repro.core.precision import Ger
 
 
@@ -36,7 +36,7 @@ def quantize_act_u8(x: jnp.ndarray):
     return q, scale.astype(jnp.float32), zp.astype(jnp.float32)
 
 
-def qdot(x: jnp.ndarray, wq: jnp.ndarray, wscale: jnp.ndarray,
+def qdot(x: jnp.ndarray, wq, wscale: jnp.ndarray | None = None,
          out_dtype=jnp.float32, *, backend: str | None = None):
     """Quantized matmul: fp activations x int8 weights -> fp.
 
@@ -49,9 +49,27 @@ def qdot(x: jnp.ndarray, wq: jnp.ndarray, wscale: jnp.ndarray,
     :class:`~repro.core.lowering.Dequant` rescale of the int32
     accumulator (x ≈ (q - zp) * xs  ->  x @ w = xs * (q @ w) - xs * zp *
     colsum(w), then per-column weight scales).
+
+    ``wq`` may also be a prepacked :class:`~repro.core.packing.
+    PackedOperand` (X-side int8 tiles from ``prepack_params_for_serving
+    (..., quantize=True)``): its stored per-column scales and Dequant
+    column sums ride the descriptor, the contract streams the packed
+    panels straight into the kernel, and the int32 accumulator — integer
+    math, exact — bitwise-matches the natural-layout qdot.
     """
     xq, xs, xzp = quantize_act_u8(x.astype(jnp.float32))
-    wsum = wq.astype(jnp.int32).sum(axis=0).astype(jnp.float32)  # (N,)
+    if packing.is_packed(wq):
+        if wscale is None:
+            wscale = wq.scale
+        wsum = wq.col_sum
+        if wscale is None or wsum is None:
+            raise ValueError("packed qdot weight is missing its scale/"
+                             "col_sum metadata; pack with "
+                             "prepack_params_for_serving(quantize=True)")
+    else:
+        if wscale is None:
+            raise ValueError("natural-layout qdot needs explicit wscale")
+        wsum = wq.astype(jnp.int32).sum(axis=0).astype(jnp.float32)  # (N,)
     dq = lowering.Dequant(row_scale=xs, row_zp=xzp, col_sum=wsum,
                           col_scale=wscale)
     return facility.contract(
@@ -74,3 +92,11 @@ def quantize_params_for_serving(params, min_size: int = 1 << 16):
         return p
     qp = jax.tree.map(visit, params)
     return qp, saved[0]
+
+
+# The generalization of the pass above: dense weights, MoE expert banks,
+# and conv filter stacks land in kernel-native packed layouts (optionally
+# int8-quantized X-side tiles for the I8GER4 fast path).  Lives in
+# core/packing.py with the layout registry; re-exported here because this
+# module is where serving callers historically found the params pass.
+prepack_params_for_serving = packing.prepack_params_for_serving

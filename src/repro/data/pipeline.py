@@ -42,8 +42,16 @@ def synthetic_batch(cfg, *, batch: int, seq: int, step: int,
                              dtype=np.int64).astype(np.int32)
         out["tokens"], out["labels"] = dtoks[:, :dl], dtoks[:, 1:]
     if cfg.vision_prefix:
-        out["vision_embeds"] = rng.normal(
-            size=(batch, cfg.vision_prefix, cfg.d_model)).astype(np.float32)
+        if cfg.frontend_stub or not cfg.patch_size:
+            out["vision_embeds"] = rng.normal(
+                size=(batch, cfg.vision_prefix,
+                      cfg.d_model)).astype(np.float32)
+        else:  # real frontend: raw images into the patch-embed conv stem
+            gh, gw = cfg.vision_grid()
+            ps = cfg.patch_size
+            out["images"] = rng.normal(
+                size=(batch, gh * ps, gw * ps,
+                      cfg.image_channels)).astype(np.float32)
         pos = np.broadcast_to(np.arange(seq)[None, None], (3, batch, seq))
         out["positions"] = pos.astype(np.int32)
     return out

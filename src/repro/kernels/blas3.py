@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import facility, lowering
+from repro.core import facility, lowering, packing
 from repro.core.precision import Ger
 
 
@@ -85,29 +85,44 @@ def complex_gemm(ar, ai, br, bi, kind: Ger = Ger.F32GER,
     return _complex_contract("mk,kn->mn", ar, ai, br, bi, kind, backend)
 
 
-@functools.lru_cache(maxsize=32)
-def _twiddle(n: int, dtype_name: str = "float32"):
-    """Host-side (numpy) twiddle factors, keyed by (n, dtype).
-
-    Built in float64 and rounded ONCE to the target dtype — never through
-    an f32 intermediate: the old device-side f32 construction both pinned
-    f32 buffers in the lru_cache for the process lifetime and (because the
-    f32 angles lose precision at large k^2) silently perturbed hundreds of
-    bf16 entries per matrix.  Returning numpy keeps nothing device-resident
-    between calls.
-    """
-    k = np.arange(n)
-    ang = -2.0 * np.pi * np.outer(k, k) / n
-    dt = jnp.dtype(dtype_name)
-    return np.cos(ang).astype(dt), np.sin(ang).astype(dt)
-
-
 _KIND_FOR_DTYPE = {
     jnp.dtype(jnp.float64): Ger.F64GER,
     jnp.dtype(jnp.float32): Ger.F32GER,
     jnp.dtype(jnp.bfloat16): Ger.BF16GER2,
     jnp.dtype(jnp.float16): Ger.F16GER2,
 }
+
+
+def _twiddle_block(n: int, dtype_name: str):
+    """The block config the (N, N, N) twiddle GEMM would dispatch at —
+    the packed store's freshness key, so a new autotune winner re-derives
+    the twiddles instead of serving a stale layout."""
+    kind = _KIND_FOR_DTYPE.get(jnp.dtype(dtype_name), Ger.F32GER)
+    return packing.plan_gemm_block(kind, n, n, n)
+
+
+def _twiddle(n: int, dtype_name: str = "float32"):
+    """Host-side (numpy) twiddle factors from the facility's packed store,
+    keyed by (n, dtype, block config) — a persistent packed constant like
+    any other prepacked operand, replacing this module's former private
+    ``lru_cache``.  ``packing.STORE.invalidate(("dft.twiddle",))`` drops
+    every cached matrix.
+
+    Built in float64 and rounded ONCE to the target dtype — never through
+    an f32 intermediate: the old device-side f32 construction both pinned
+    f32 buffers in the cache for the process lifetime and (because the
+    f32 angles lose precision at large k^2) silently perturbed hundreds of
+    bf16 entries per matrix.  Returning numpy keeps nothing device-resident
+    between calls.
+    """
+    def build():
+        k = np.arange(n)
+        ang = -2.0 * np.pi * np.outer(k, k) / n
+        dt = jnp.dtype(dtype_name)
+        return np.cos(ang).astype(dt), np.sin(ang).astype(dt)
+
+    key = ("dft.twiddle", n, dtype_name, _twiddle_block(n, dtype_name))
+    return packing.STORE.get_or_build(key, build)
 
 
 def dft(x_re: jnp.ndarray, x_im: jnp.ndarray | None = None,

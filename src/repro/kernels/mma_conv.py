@@ -55,7 +55,8 @@ def select_fuse_kw(kw: int, c: int, interpret: bool) -> bool:
 
 
 def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, sw: int,
-                  acc_dtype, fuse_kw: bool, ep: _epilogue.Epilogue | None):
+                  acc_dtype, fuse_kw: bool, ep: _epilogue.Epilogue | None,
+                  w_packed: bool = False):
     refs = list(refs)
     x_ref, w_ref = refs[:2]
     pos = 2
@@ -73,21 +74,24 @@ def _sconv_kernel(*refs, kh_total: int, kw_total: int, ow: int, sw: int,
     row = x_ref[0, 0]                       # (W, C) image row oh*sh + kh
     c = row.shape[1]
     span = (ow - 1) * sw + 1                # row extent one shift covers
+    # One kh-slice of the filter bank, (KW, C, bf): a natural block or a
+    # prepacked slab whose (gf, kh) tile coordinates were block-indexed.
+    wslab = w_ref[0, 0] if w_packed else w_ref[0]
     if fuse_kw:
         # Hoisted form: one (OW, KW*C) panel of shifted row reads against
         # the full (KW*C, bf) filter slice — a single rank-(KW*C) update
         # instead of KW rank-C updates.  Column order is kw-major to match
-        # w_ref.reshape's (kw, c) flattening.
+        # the slab reshape's (kw, c) flattening.
         patch = jnp.concatenate(
             [row[kw:kw + span:sw, :] for kw in range(kw_total)], axis=1)
-        wk = w_ref[0].reshape(kw_total * c, -1)         # (KW*C, bf)
+        wk = wslab.reshape(kw_total * c, -1)            # (KW*C, bf)
         acc_ref[...] += jax.lax.dot_general(
             patch, wk, (((1,), (0,)), ((), ())),
             preferred_element_type=acc_dtype)
     else:
         for kw in range(kw_total):          # shifted displacements
             xs = row[kw:kw + span:sw, :]    # (OW, C) static strided slice
-            wk = w_ref[0, kw]               # (C, bf)
+            wk = wslab[kw]                  # (C, bf)
             acc_ref[...] += jax.lax.dot_general(
                 xs, wk, (((1,), (0,)), ((), ())),
                 preferred_element_type=acc_dtype)
@@ -110,7 +114,8 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
                bias: jnp.ndarray | None = None,
                residual: jnp.ndarray | None = None,
                interpret: bool = False,
-               fuse_kw: bool | None = None) -> jnp.ndarray:
+               fuse_kw: bool | None = None,
+               w_layout=None) -> jnp.ndarray:
     """VALID 2-D convolution, stride (sh, sw) (paper's h * A).
 
     image: (N, H, W, C); kernels: (KH, KW, C, F) -> (N, OH, OW, F).
@@ -118,11 +123,30 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
     final-KH deprime store (epilogue.py contract).  ``fuse_kw`` pins the
     single-panel-dot form on/off (None = auto: fused whenever the
     concatenated panel is MXU-liftable).
+
+    ``w_layout`` (``packing.ConvLayout``) marks a prepacked filter bank:
+    ``kernels`` is the raw (gf, KH, KW, C, bf) tile stream and each grid
+    step block-indexes one (KW, C, bf) slab straight into VMEM — no
+    per-call filter relayout.  The layout's bf must equal the dispatch bf.
     """
     n, h, w, c = image.shape
-    kh, kw, c2, f = kernels.shape
+    if w_layout is not None:
+        if kernels.ndim != 5:
+            raise ValueError(f"packed filter rank {kernels.ndim} does not "
+                             f"match layout {w_layout!r}")
+        kh, kw, c2, f = (w_layout.kh, w_layout.kw, w_layout.c, w_layout.f)
+        if bf is None:
+            bf = w_layout.bf
+        if bf != w_layout.bf:
+            raise ValueError(
+                f"stale packed filter layout: packed at bf={w_layout.bf} "
+                f"but dispatched at bf={bf} — repack (packing.repack) or "
+                f"demote (packing.demote_op); never read stale panels")
+    else:
+        kh, kw, c2, f = kernels.shape
     if c != c2:
-        raise ValueError(f"channel mismatch {image.shape} vs {kernels.shape}")
+        raise ValueError(f"channel mismatch {image.shape} vs "
+                         f"{(kh, kw, c2, f)}")
     sh, sw = stride
     oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
     bf = bf or min(f, 128)
@@ -140,15 +164,20 @@ def mma_conv2d(image: jnp.ndarray, kernels: jnp.ndarray, *,
     grid = (n * oh, -(-f // bf), kh)
     kernel = functools.partial(
         _sconv_kernel, kh_total=kh, kw_total=kw, ow=ow, sw=sw,
-        acc_dtype=acc_dtype, fuse_kw=fuse_kw, ep=ep)
+        acc_dtype=acc_dtype, fuse_kw=fuse_kw, ep=ep,
+        w_packed=w_layout is not None)
 
     in_specs = [
         # One full image row (oh*sh + kh), resident once per (row, kh).
         pl.BlockSpec((1, 1, w, c),
                      lambda i, j, k, oh=oh, sh=sh: (i // oh,
                                                     (i % oh) * sh + k, 0, 0)),
-        # One kh-slice of the filter bank: (1, KW, C, bf).
-        pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j)),
+        # One kh-slice of the filter bank: a (1, KW, C, bf) natural block,
+        # or the same slab block-indexed out of the packed (gf, KH, KW, C,
+        # bf) tile stream.
+        (pl.BlockSpec((1, kw, c, bf), lambda i, j, k: (k, 0, 0, j))
+         if w_layout is None else
+         pl.BlockSpec((1, 1, kw, c, bf), lambda i, j, k: (j, k, 0, 0, 0))),
     ]
     inputs = [image, kernels]
     if ep is not None and ep.bias:

@@ -54,9 +54,17 @@ def _unpack_int4(v: jnp.ndarray, axis: int) -> jnp.ndarray:
 def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                  has_c, alpha, beta, ep: _epilogue.Epilogue | None = None,
                  batched: bool = False,
-                 has_masks=(False, False, False)):
+                 has_masks=(False, False, False),
+                 x_lead: int | None = None, y_lead: int | None = None):
     ep = ep if ep is not None and not ep.is_identity else None
     has_xm, has_ym, has_pm = has_masks
+    # Leading singleton block dims to strip per operand read: 1 for a
+    # batch-gridded natural panel, 2 (+1 batched) for a prepacked panel
+    # whose (g*, gk) tile coordinates are block-indexed away.
+    if x_lead is None:
+        x_lead = 1 if batched else 0
+    if y_lead is None:
+        y_lead = 1 if batched else 0
 
     def kernel(*refs):
         refs = list(refs)
@@ -90,8 +98,8 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                 acc_ref[...] = jnp.zeros_like(acc_ref)
 
         # ---- one rank-bk update:  acc += [-] X_panel @ Y_panel ----
-        x = x_ref[0] if batched else x_ref[...]
-        y = y_ref[0] if batched else y_ref[...]
+        x = x_ref[(0,) * x_lead] if x_lead else x_ref[...]
+        y = y_ref[(0,) * y_lead] if y_lead else y_ref[...]
         if pol.packed_int4:
             x = _unpack_int4(x, axis=1)
             y = _unpack_int4(y, axis=0)
@@ -157,12 +165,21 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
              bias: jnp.ndarray | None = None,
              residual: jnp.ndarray | None = None,
              masks: tuple | None = None,
-             out_dtype=None, interpret: bool = False) -> jnp.ndarray:
+             out_dtype=None, interpret: bool = False,
+             x_layout=None, y_layout=None) -> jnp.ndarray:
     """C <- alpha * [-](X @ Y)  [+ beta * (+/-)C]  with resident accumulator.
 
     x: (M, K) or batched (B, M, K); y: (K, N) / (B, K, N); c: optional
     (M, N) / (B, M, N) accumulator input (the pp/np/pn/nn accumulate
     forms).  int4 kind: K axis packed 2-per-byte.
+
+    ``x_layout`` / ``y_layout`` (``packing.GemmLayout``) mark a prepacked
+    operand: the raw panel-major tile array (``(gm, gk, bm, bk)`` X-side,
+    ``(gn, gk, bk, bn)`` Y-side, optional leading batch) whose BlockSpec
+    index maps stream one packed panel per grid step straight into VMEM —
+    no per-call relayout.  The layout's block config must equal the
+    dispatch block; fringe panels are zero-padded at pack time, which the
+    k-fringe mask and dropped out-of-bounds stores make bitwise-inert.
 
     Batched operands run as ONE ``pallas_call`` with grid ``(B, gm, gn,
     gk)`` — the batch axis is a grid dimension with batch-indexed
@@ -183,18 +200,40 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
             "F32GER_3XBF16 is a registered expansion hook — lower it "
             "through facility.contract (core/lowering.py), which chains "
             "three BF16GER2 kernel passes over one resident accumulator")
-    batched = x.ndim == 3
-    if batched:
-        b, m, k_packed = x.shape
-        b2, k2, n = y.shape
-        if b != b2 or k_packed != k2:
-            raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    if (x_layout is not None or y_layout is not None) and pol.packed_int4:
+        raise ValueError("prepacked layouts are byte-addressable tiles; "
+                         "packed-int4 kinds keep their nibble packing")
+    if x_layout is not None:
+        if x.ndim != 4 + bool(x_layout.batched):
+            raise ValueError(f"packed x rank {x.ndim} does not match "
+                             f"layout {x_layout!r}")
+        bx = x.shape[0] if x_layout.batched else None
+        m, k_packed = x_layout.rows, x_layout.cols
+    elif x.ndim == 3:
+        bx, m, k_packed = x.shape
     else:
-        b = None
+        bx = None
         m, k_packed = x.shape
+    if y_layout is not None:
+        if y.ndim != 4 + bool(y_layout.batched):
+            raise ValueError(f"packed y rank {y.ndim} does not match "
+                             f"layout {y_layout!r}")
+        by = y.shape[0] if y_layout.batched else None
+        k2, n = y_layout.rows, y_layout.cols
+    elif y.ndim == 3:
+        by, k2, n = y.shape
+    else:
+        by = None
         k2, n = y.shape
-        if k_packed != k2:
-            raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    if k_packed != k2 or (bx is not None and by is not None and bx != by):
+        raise ValueError(f"shape mismatch x{(bx, m, k_packed)} @ "
+                         f"y{(by, k2, n)}")
+    b = bx if bx is not None else by
+    batched = b is not None
+    if batched and x_layout is None and x.ndim != 3:
+        raise ValueError("batched y operand needs a batched (B, M, K) x")
+    if batched and y_layout is None and y.ndim != 3:
+        raise ValueError("batched x operand needs a batched (B, K, N) y")
     pack = 2 if pol.packed_int4 else 1
     k = k_packed * pack
     out_dtype = out_dtype or pol.acc_dtype
@@ -210,10 +249,20 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
             "(nibble unpacking and rank predicates do not compose in the "
             "streamed kernel)")
 
+    if block is None and y_layout is not None:
+        block = y_layout.block
+    if block is None and x_layout is not None:
+        block = x_layout.block
     cfg = (tiling.choose_blocks(m, n, k, kind) if block is None
            else tiling.BlockConfig(*block))
     tiling.assert_fits_vmem(cfg, kind)
     bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    for lay in (x_layout, y_layout):
+        if lay is not None and tuple(lay.block) != (bm, bn, bk):
+            raise ValueError(
+                f"stale packed layout: packed at block {lay.block} but "
+                f"dispatched at {(bm, bn, bk)} — repack (packing.repack) "
+                f"or demote (packing.demote_op); never read stale panels")
     bk_packed = max(bk // pack, 1)
     bk_logical = bk_packed * pack
     grid2d = (-(-m // bm), -(-n // bn), -(-k_packed // bk_packed))
@@ -234,9 +283,36 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
             return pl.BlockSpec((1,) + shape2, imap(fn, True))
         return pl.BlockSpec(shape2, imap(fn))
 
+    def packed_spec(lay, fn):
+        # Packed panel stream: the (g*, gk) tile coordinates are block
+        # indices, the panel itself is the trailing 2-D block.  A packed
+        # operand without a batch axis under a batched grid is shared —
+        # its index map simply ignores the batch coordinate.
+        shape = (1, 1) + fn("panel")
+        if lay.batched:
+            return pl.BlockSpec(
+                (1,) + shape, lambda bb, i, j, kk: (bb,) + fn((i, j, kk)))
+        if batched:
+            return pl.BlockSpec(shape, lambda bb, i, j, kk: fn((i, j, kk)))
+        return pl.BlockSpec(shape, lambda i, j, kk: fn((i, j, kk)))
+
+    def x_tile(at):
+        if at == "panel":
+            return (bm, bk_packed)
+        i, j, kk = at
+        return (i, kk, 0, 0)
+
+    def y_tile(at):
+        if at == "panel":
+            return (bk_packed, bn)
+        i, j, kk = at
+        return (j, kk, 0, 0)
+
     in_specs = [
-        bspec((bm, bk_packed), lambda i, j, kk: (i, kk), with_b=True),
-        bspec((bk_packed, bn), lambda i, j, kk: (kk, j), with_b=True),
+        (bspec((bm, bk_packed), lambda i, j, kk: (i, kk), with_b=True)
+         if x_layout is None else packed_spec(x_layout, x_tile)),
+        (bspec((bk_packed, bn), lambda i, j, kk: (kk, j), with_b=True)
+         if y_layout is None else packed_spec(y_layout, y_tile)),
     ]
     inputs = [x, y]
     if xm is not None:
@@ -262,11 +338,17 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
                               with_b=True))
         inputs.append(residual)
 
+    def lead(lay):
+        if lay is None:
+            return None                      # natural: 1 if batched else 0
+        return 2 + (1 if lay.batched else 0)
+
     kernel = _make_kernel(
         pol=pol, k_steps=grid2d[2], k_size=k, bk_logical=bk_logical,
         neg_product=neg_product, neg_acc=neg_acc, has_c=c is not None,
         alpha=alpha, beta=beta, ep=ep, batched=batched,
-        has_masks=(xm is not None, ym is not None, pm is not None))
+        has_masks=(xm is not None, ym is not None, pm is not None),
+        x_lead=lead(x_layout), y_lead=lead(y_layout))
 
     out_shape = (b, m, n) if batched else (m, n)
     return pl.pallas_call(

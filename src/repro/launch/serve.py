@@ -384,6 +384,10 @@ def main():
     ap.add_argument("--pages", type=int, default=None)
     ap.add_argument("--deadline", type=int, default=None)
     ap.add_argument("--guards", action="store_true")
+    ap.add_argument("--prepack", action="store_true",
+                    help="pack weights into kernel-native tile layouts at "
+                         "admission (core/packing.py); kernels then stream "
+                         "the packed panels with zero per-call relayout")
     ap.add_argument("--fault-matrix", action="store_true",
                     help="run the seeded fault-injection matrix instead "
                          "of a plain serving run")
@@ -393,6 +397,10 @@ def main():
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(cfg, jax.random.key(0))
+    if args.prepack:
+        from repro.core.packing import prepack_params_for_serving
+        params, stats = prepack_params_for_serving(params, min_size=1024)
+        print(f"prepacked params: {stats}")
 
     if args.fault_matrix:
         results = run_fault_matrix(cfg, params, batch=args.batch,

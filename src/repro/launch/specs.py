@@ -57,8 +57,14 @@ def batch_specs(cfg, *, batch: int, seq: int, for_train: bool = True):
             "labels": sds((batch, seq), jnp.int32),
         }
     if cfg.vision_prefix:
-        b["vision_embeds"] = sds((batch, cfg.vision_prefix, cfg.d_model),
-                                 jnp.float32)
+        if cfg.frontend_stub or not cfg.patch_size:
+            b["vision_embeds"] = sds((batch, cfg.vision_prefix, cfg.d_model),
+                                     jnp.float32)
+        else:  # real frontend: raw images into the patch-embed conv stem
+            gh, gw = cfg.vision_grid()
+            ps = cfg.patch_size
+            b["images"] = sds((batch, gh * ps, gw * ps, cfg.image_channels),
+                              jnp.float32)
         b["positions"] = sds((3, batch, seq), jnp.int32)
     if not for_train:
         b.pop("labels", None)
@@ -70,7 +76,10 @@ def batch_axes(cfg, for_train: bool = True):
            "labels": ("batch", None)} if cfg.is_enc_dec else
           {"tokens": ("batch", None), "labels": ("batch", None)})
     if cfg.vision_prefix:
-        ax["vision_embeds"] = ("batch", None, None)
+        if cfg.frontend_stub or not cfg.patch_size:
+            ax["vision_embeds"] = ("batch", None, None)
+        else:
+            ax["images"] = ("batch", None, None, None)
         ax["positions"] = (None, "batch", None)
     if not for_train:
         ax.pop("labels", None)

@@ -3,7 +3,8 @@
 Families (DESIGN.md section 4): dense (llama lineage incl. GQA + SWA),
 moe (mixtral, deepseek-moe fine-grained + shared experts), ssm (mamba2),
 hybrid (zamba2: mamba backbone + shared attention block), audio (whisper
-enc-dec, stub frontend), vlm (qwen2-vl backbone, M-RoPE, stub frontend).
+enc-dec, conv audio stem), vlm (qwen2-vl backbone, M-RoPE, conv
+patch-embed vision stem).
 
 Layer stacks are `lax.scan`s over stacked parameter pytrees (keeps HLO and
 compile times O(1) in depth — essential for the 95-layer dry runs), with a
@@ -160,7 +161,19 @@ def init_params(cfg, key) -> Params:
                 "conv2_b": jnp.zeros((d,), jnp.float32),
             }
     if cfg.vision_prefix:
-        p["vision_proj"] = L._dense_init(ks[7], (cfg.d_model, cfg.d_model))
+        kv = jax.random.split(ks[7], 2)
+        p["vision_proj"] = L._dense_init(kv[0], (cfg.d_model, cfg.d_model))
+        if not cfg.frontend_stub and cfg.patch_size:
+            # qwen2-vl patch-embed stem (whisper audio-stem pattern):
+            # one CONV2D with kernel = stride = patch_size over raw
+            # images, bias fused into the conv deprime.
+            ps, c, d = cfg.patch_size, cfg.image_channels, cfg.d_model
+            p["vision_patch"] = {
+                "patch_w": jax.random.normal(
+                    kv[1], (ps, ps, c, d), jnp.float32)
+                * (ps * ps * c) ** -0.5,
+                "patch_b": jnp.zeros((d,), jnp.float32),
+            }
     return p
 
 
@@ -189,6 +202,9 @@ def param_axes(cfg):
             }
     if cfg.vision_prefix:
         p["vision_proj"] = ("embed", None)
+        if not cfg.frontend_stub and cfg.patch_size:
+            p["vision_patch"] = {"patch_w": (None, None, None, "embed"),
+                                 "patch_b": ("embed",)}
     return p
 
 
@@ -268,17 +284,51 @@ def _cos_sin_for(cfg, positions, batch=None):
 # Forward (training / encoder)
 # ======================================================================
 
+def _vision_patch_embed(params, images, cfg):
+    """qwen2-vl patch-embed stem: raw images (B, gh*ps, gw*ps, C) through
+    ONE facility CONV2D with kernel = stride = patch_size (the stem IS a
+    GEMM over the patch matrix — paper eq. 8), bias fused into the conv
+    deprime.  Returns (B, vision_prefix, d_model) patch embeddings; the
+    filter bank may arrive prepacked (``prepack_params_for_serving`` packs
+    ``patch_w`` into its conv tile layout)."""
+    from repro.core import facility
+    from repro.core.facility import Plan
+    from repro.kernels.epilogue import Epilogue
+    fe = params["vision_patch"]
+    ps = cfg.patch_size
+    h = facility.contract(
+        facility.CONV2D, images.astype(jnp.float32), fe["patch_w"],
+        bias=fe["patch_b"],
+        plan=Plan(stride=ps, padding="valid", epilogue=Epilogue(bias=True)))
+    b, gh, gw, d = h.shape
+    if gh * gw != cfg.vision_prefix:
+        raise ValueError(
+            f"image grid {gh}x{gw} does not cover vision_prefix="
+            f"{cfg.vision_prefix}; expected {cfg.vision_grid()} patches "
+            f"of edge {ps}")
+    return h.reshape(b, gh * gw, d)
+
+
 def _embed_inputs(params, batch, cfg):
-    """Token (+ stub-modality) embedding; returns (h, positions)."""
+    """Token (+ modality-frontend) embedding; returns (h, positions)."""
     from repro.core import facility
     tokens = batch["tokens"]
     b, s = tokens.shape
     h = L.embed_tokens(params["embed"], tokens, cfg)
-    if cfg.vision_prefix and "vision_embeds" in batch:
-        ve = facility.contract(facility.DOT,
-                               batch["vision_embeds"].astype(h.dtype),
-                               params["vision_proj"])
-        h = jnp.concatenate([ve, h[:, cfg.vision_prefix:]], axis=1)
+    if cfg.vision_prefix:
+        # Real frontend: raw images through the patch-embed conv stem.
+        # Precomputed "vision_embeds" stay accepted (stub configs, and
+        # batches recorded before the frontend was de-stubbed).
+        if not cfg.frontend_stub and cfg.patch_size and "images" in batch:
+            ve = _vision_patch_embed(params, batch["images"], cfg)
+        elif "vision_embeds" in batch:
+            ve = batch["vision_embeds"]
+        else:
+            ve = None
+        if ve is not None:
+            ve = facility.contract(facility.DOT, ve.astype(h.dtype),
+                                   params["vision_proj"])
+            h = jnp.concatenate([ve, h[:, cfg.vision_prefix:]], axis=1)
     if cfg.mrope:
         positions = batch["positions"]        # (3, B, S)
     else:

@@ -1,0 +1,476 @@
+"""Persistent prepacked operand layouts (core/packing.py).
+
+Holds the subsystem's contract (DESIGN.md section 9):
+
+  * pack -> unpack round-trips exactly, for every side/orientation/lead
+    shape, non-divisible fringes included (property tests);
+  * a packed dispatch is BITWISE equal to the natural-layout dispatch on
+    every backend rung (pallas / xla / ref), gemm + conv + batched MoE;
+  * pack-once: a steady-state packed dispatch issues zero per-call
+    relayout (no pack / repack / demote events, no transpose of the
+    weight in the traced program);
+  * stale layouts self-invalidate: flipping the autotune winner repacks
+    (concrete) or demotes (traced) — NEVER silently reads the old tiles;
+  * packed-int8 weights through the I8GER4 Dequant plan bitwise-match the
+    natural-layout ``quant.qdot``;
+  * the PackedStore replaces private host caches (blas3 twiddles).
+"""
+
+import dataclasses
+import itertools
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune, facility, lowering, packing, quant, tiling
+from repro.core.packing import (ConvLayout, GemmLayout, pack_conv,
+                                pack_gemm, prepack_params_for_serving)
+from repro.core.precision import Ger
+
+# The round-trip laws run as hypothesis property tests where available
+# and as a deterministic fringe-heavy sweep everywhere (the CI container
+# has no hypothesis; the sweep is the executable variant there).
+try:
+    import hypothesis
+    from hypothesis import given, strategies as st
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _pallas():
+    return facility.FacilityConfig(use_pallas=True, interpret=True)
+
+
+@pytest.fixture(autouse=True)
+def _clean_counters():
+    packing.clear_state()
+    yield
+    packing.clear_state()
+
+
+# ----------------------------------------------------------------------
+# Round-trip laws (property tests + deterministic fringe sweep)
+# ----------------------------------------------------------------------
+
+def _check_gemm_round_trip(rows, cols, side, transposed, lead, dtype,
+                           seed):
+    """pack -> unpack is exact for any shape (fringes zero-padded then
+    sliced away), any orientation, any leading layer-stack axes."""
+    rng = np.random.default_rng(seed)
+    lay = GemmLayout(kind=Ger.F32GER, block=(32, 64, 48), side=side,
+                     rows=rows, cols=cols, transposed=transposed,
+                     batched=lead > 0)
+    shape = (2,) * lead + lay.caller_shape
+    w = jnp.asarray(rng.normal(size=shape), jnp.dtype(dtype))
+    po = pack_gemm(w, lay)
+    assert po.shape == w.shape and po.ndim == w.ndim
+    np.testing.assert_array_equal(np.asarray(po.unpack(), np.float32),
+                                  np.asarray(w, np.float32))
+
+
+def _check_conv_round_trip(kh, kw, c, f, bf, nd, seed):
+    rng = np.random.default_rng(seed)
+    if nd == 1:
+        kh = 1
+    lay = ConvLayout(kind=Ger.F32GER, bf=bf, kh=kh, kw=kw, c=c, f=f, nd=nd)
+    w = jnp.asarray(rng.normal(size=lay.caller_shape), jnp.float32)
+    po = pack_conv(w, lay)
+    assert po.shape == w.shape
+    np.testing.assert_array_equal(np.asarray(po.unpack()), np.asarray(w))
+
+
+# Non-divisible fringes vs the (32, 64, 48) pack block on both axes,
+# plus exact-tile and smaller-than-tile extremes.
+_FRINGE_DIMS = [1, 7, 48, 50, 64, 96, 107, 150]
+
+
+def test_gemm_pack_unpack_round_trip_sweep():
+    cases = itertools.product(
+        [(1, 107), (7, 150), (48, 64), (50, 96), (107, 1)],
+        ["x", "y"], [False, True], [0, 1, 2],
+        ["float32", "bfloat16", "float16"])
+    for i, ((rows, cols), side, transposed, lead, dtype) in \
+            enumerate(cases):
+        _check_gemm_round_trip(rows, cols, side, transposed, lead,
+                               dtype, seed=i)
+
+
+def test_conv_pack_unpack_round_trip_sweep():
+    cases = itertools.product([1, 3, 5], [1, 4, 9], _FRINGE_DIMS[:6],
+                              [8, 32, 128], [1, 2])
+    for i, (kw, c, f, bf, nd) in enumerate(cases):
+        _check_conv_round_trip(3, kw, c, f, bf, nd, seed=i)
+
+
+if HAVE_HYPOTHESIS:
+    dims = st.integers(1, 150)
+
+    @given(rows=dims, cols=dims, side=st.sampled_from(["x", "y"]),
+           transposed=st.booleans(), lead=st.integers(0, 2),
+           dtype=st.sampled_from(["float32", "bfloat16", "float16"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_gemm_pack_unpack_round_trip_property(rows, cols, side,
+                                                  transposed, lead,
+                                                  dtype, seed):
+        _check_gemm_round_trip(rows, cols, side, transposed, lead,
+                               dtype, seed)
+
+    @given(kh=st.integers(1, 5), kw=st.integers(1, 5),
+           c=st.integers(1, 9), f=st.integers(1, 150),
+           bf=st.sampled_from([8, 32, 128]), nd=st.sampled_from([1, 2]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_conv_pack_unpack_round_trip_property(kh, kw, c, f, bf, nd,
+                                                  seed):
+        _check_conv_round_trip(kh, kw, c, f, bf, nd, seed)
+
+
+def test_pack_rejects_shape_mismatch_and_int4():
+    lay = GemmLayout(kind=Ger.F32GER, block=(32, 64, 48), side="y",
+                     rows=16, cols=16)
+    with pytest.raises(ValueError, match="natural shape"):
+        pack_gemm(jnp.zeros((8, 8)), lay)
+    with pytest.raises(ValueError, match="batch axis"):
+        pack_gemm(jnp.zeros((16, 16)),
+                  dataclasses.replace(lay, batched=True))
+    with pytest.raises(ValueError, match="int4"):
+        pack_gemm(jnp.zeros((16, 16), jnp.int8),
+                  dataclasses.replace(lay, kind=Ger.I4GER8))
+
+
+# ----------------------------------------------------------------------
+# Packed dispatch == natural dispatch, bitwise, on every backend rung
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "xla", "ref"])
+def test_packed_gemm_bitwise_equals_natural_all_backends(backend):
+    rng = np.random.default_rng(0)
+    m, k, n = 24, 96, 200                      # fringe vs default blocks
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k)
+    po = pack_gemm(w, lay)
+    plan = lowering.Plan(ger=Ger.F32GER, backend=backend,
+                         out_dtype=jnp.float32)
+    with facility.configure(_pallas()):
+        nat = facility.contract("mk,kn->mn", x, w, plan=plan)
+        pk = facility.contract("mk,kn->mn", x, po, plan=plan)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+    if backend != "pallas":                    # xla/ref rungs demote
+        assert packing.COUNTERS["demote"] >= 1
+
+
+def test_packed_moe_bank_bitwise():
+    """Batched expert banks: the E axis rides the kernel's batch grid."""
+    rng = np.random.default_rng(1)
+    e, c, d, f = 4, 16, 96, 136
+    x = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, c, f, d, b=e, batched=True)
+    po = pack_gemm(w, lay)
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+    with facility.configure(_pallas()):
+        nat = facility.contract("ecd,edf->ecf", x, w, plan=plan)
+        pk = facility.contract("ecd,edf->ecf", x, po, plan=plan)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+
+
+@pytest.mark.parametrize("spec,wshape,nd", [
+    (facility.CONV1D, (3, 24, 72), 1),
+    (facility.CONV2D, (3, 3, 8, 72), 2),
+])
+def test_packed_conv_bitwise(spec, wshape, nd):
+    rng = np.random.default_rng(2)
+    x_shape = (2, 48, 24) if nd == 1 else (2, 12, 12, 8)
+    x = jnp.asarray(rng.normal(size=x_shape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=wshape), jnp.float32)
+    kh = 1 if nd == 1 else wshape[0]
+    kw, c, f = wshape[-3:]
+    lay = packing.conv_layout(Ger.F32GER, kh, kw, c, f, nd=nd)
+    po = pack_conv(w, lay)
+    plan = lowering.Plan(ger=Ger.F32GER, padding="same",
+                         out_dtype=jnp.float32)
+    with facility.configure(_pallas()):
+        nat = facility.contract(spec, x, w, plan=plan)
+        pk = facility.contract(spec, x, po, plan=plan)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+
+
+def test_packed_int8_qdot_bitwise():
+    """Packed-int8 tiles through the I8GER4 Dequant plan: the int32
+    accumulator is integer math, so packed must BITWISE match natural."""
+    rng = np.random.default_rng(3)
+    m, k, n = 8, 96, 200
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wq, wscale = quant.quantize_weight(w)
+    col_sum = wq.astype(jnp.int32).sum(axis=0).astype(jnp.float32)
+    lay = packing.gemm_layout(Ger.I8GER4, n, m, k, side="x",
+                              transposed=True)
+    po = pack_gemm(wq, lay, scale=wscale, col_sum=col_sum)
+    with facility.configure(_pallas()):
+        nat = quant.qdot(x, wq, wscale)
+        pk = quant.qdot(x, po)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+
+
+def test_packed_quantized_refuses_cast_and_missing_metadata():
+    wq = jnp.ones((32, 32), jnp.int8)
+    lay = packing.gemm_layout(Ger.I8GER4, 32, 8, 32, side="x",
+                              transposed=True)
+    po = pack_gemm(wq, lay, scale=jnp.ones((1, 32)), col_sum=None)
+    with pytest.raises(ValueError, match="refusing to cast"):
+        po.astype(jnp.float32)
+    with pytest.raises(ValueError, match="scale/col_sum"):
+        quant.qdot(jnp.ones((4, 32)), po)
+
+
+# ----------------------------------------------------------------------
+# Pack-once: zero per-call relayout of the weight operand
+# ----------------------------------------------------------------------
+
+def test_steady_state_dispatch_zero_relayout():
+    """After the single pack, repeated dispatch (traced AND eager) issues
+    no pack/repack/demote events, and the traced program contains no
+    transpose of the packed weight."""
+    rng = np.random.default_rng(4)
+    m, k, n = 8, 64, 192
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k)
+    po = pack_gemm(w, lay)
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+    base = dict(packing.COUNTERS)
+    with facility.configure(_pallas()):
+        fn = lambda xx, ww: facility.contract("mk,kn->mn", xx, ww,
+                                              plan=plan)
+        jaxpr = jax.make_jaxpr(fn)(x, po)
+        # the packed panels feed the kernel as-is: no transpose/relayout
+        # primitives on the weight between the jit boundary and the call
+        prims = [e.primitive.name for e in jaxpr.eqns]
+        assert "transpose" not in prims, prims
+        jfn = jax.jit(fn)
+        for _ in range(3):
+            jfn(x, po)
+        for _ in range(2):
+            fn(x, po)
+    assert dict(packing.COUNTERS) == base, packing.EVENTS
+
+
+# ----------------------------------------------------------------------
+# Stale-layout invalidation: winner flips must repack, never read stale
+# ----------------------------------------------------------------------
+
+def _plant_winner(tmp_path, monkeypatch, kind, m, n, k, block):
+    cache = autotune.AutotuneCache(tmp_path / "at.json")
+    monkeypatch.setattr(autotune, "_DEFAULT_CACHE", cache)
+    cache.put(autotune.cache_key(kind, m, n, k),
+              tiling.BlockConfig(*block), source="test", score=1.0)
+    return cache
+
+
+def test_stale_layout_repacks_on_winner_flip(tmp_path, monkeypatch):
+    rng = np.random.default_rng(5)
+    m, k, n = 8, 96, 192
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    # pack under an explicit block, then flip the autotune winner
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k, block=(8, 128, 64))
+    po = pack_gemm(w, lay)
+    _plant_winner(tmp_path, monkeypatch, Ger.F32GER, m, n, k, (8, 64, 32))
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+    with facility.configure(_pallas()):
+        nat = facility.contract("mk,kn->mn", x, w, plan=plan)
+        pk = facility.contract("mk,kn->mn", x, po, plan=plan)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+    assert packing.COUNTERS["repack"] == 1
+    assert packing.COUNTERS["invalidate"] == 1
+    assert packing.COUNTERS["demote"] == 0
+
+
+def test_stale_layout_demotes_under_trace(tmp_path, monkeypatch):
+    """Inside jit a host-side repack is impossible: the stale pack must
+    demote to natural layout (and still be correct), never be read as
+    tiles of the wrong block."""
+    rng = np.random.default_rng(6)
+    m, k, n = 8, 96, 192
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k, block=(8, 128, 64))
+    po = pack_gemm(w, lay)
+    _plant_winner(tmp_path, monkeypatch, Ger.F32GER, m, n, k, (8, 64, 32))
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+    with facility.configure(_pallas()):
+        nat = facility.contract("mk,kn->mn", x, w, plan=plan)
+        pk = jax.jit(lambda xx, ww: facility.contract(
+            "mk,kn->mn", xx, ww, plan=plan))(x, po)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+    assert packing.COUNTERS["demote"] >= 1
+    assert any(e.get("why") == "stale-under-trace"
+               for e in packing.EVENTS)
+    assert packing.COUNTERS["repack"] == 0
+
+
+def test_fresh_layout_survives_matching_winner(tmp_path, monkeypatch):
+    """A winner that AGREES with the pack must not repack."""
+    m, k, n = 8, 96, 192
+    w = jnp.ones((k, n), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k, block=(8, 64, 32))
+    po = pack_gemm(w, lay)
+    _plant_winner(tmp_path, monkeypatch, Ger.F32GER, m, n, k, (8, 64, 32))
+    x = jnp.ones((m, k), jnp.float32)
+    with facility.configure(_pallas()):
+        facility.contract("mk,kn->mn", x, po,
+                          plan=lowering.Plan(ger=Ger.F32GER,
+                                             out_dtype=jnp.float32))
+    assert packing.COUNTERS["repack"] == 0
+    assert packing.COUNTERS["demote"] == 0
+
+
+def test_kernel_raises_on_stale_block_bypass():
+    """Belt-and-braces: handing the kernel a layout packed at a different
+    block than the dispatch must raise, not stream wrong tiles."""
+    from repro.kernels.mma_gemm import mma_gemm
+    w = jnp.ones((64, 128), jnp.float32)
+    lay = GemmLayout(kind=Ger.F32GER, block=(8, 64, 32), side="y",
+                     rows=64, cols=128)
+    po = pack_gemm(w, lay)
+    with pytest.raises(ValueError, match="stale packed layout"):
+        mma_gemm(jnp.ones((8, 64)), po.data, Ger.F32GER,
+                 y_layout=lay, block=(8, 128, 64), interpret=True)
+
+
+# ----------------------------------------------------------------------
+# Guarded-dispatch ladder: packed -> natural demotion at rung boundaries
+# ----------------------------------------------------------------------
+
+def test_guarded_ladder_demotes_packed_cleanly():
+    """With guards on and the pallas rung poisoned, the ladder's xla rung
+    must see the NATURAL weight (demoted exactly once) and agree."""
+    from repro.runtime import faults as _faults
+    rng = np.random.default_rng(7)
+    m, k, n = 16, 64, 192
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, m, n, k)
+    po = pack_gemm(w, lay)
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+    cfg = dataclasses.replace(_pallas(), guards=True)
+    plan_f = _faults.FaultPlan([_faults.FaultSpec(
+        point=_faults.CONTRACT_DISPATCH, kind=_faults.RAISE)])
+    with facility.configure(cfg):
+        ref_out = facility.contract("mk,kn->mn", x, w, plan=plan)
+        with _faults.install(plan_f):
+            out = facility.contract("mk,kn->mn", x, po, plan=plan)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-6, atol=1e-6)
+    assert packing.COUNTERS["demote"] >= 1
+
+
+# ----------------------------------------------------------------------
+# prepack_params_for_serving + model-level equality
+# ----------------------------------------------------------------------
+
+def test_prepack_skips_tok_and_small_and_nonfloat():
+    params = {
+        "embed": {"tok": jnp.ones((512, 128))},
+        "small": jnp.ones((4, 4)),
+        "ints": jnp.ones((256, 256), jnp.int32),
+        "big": jnp.ones((128, 512)),
+    }
+    pp, stats = prepack_params_for_serving(params, min_size=1 << 12)
+    assert not packing.is_packed(pp["embed"]["tok"])
+    assert not packing.is_packed(pp["small"])
+    assert not packing.is_packed(pp["ints"])
+    assert packing.is_packed(pp["big"])
+    assert stats["dense"] == 1
+
+
+def test_prepack_quantize_builds_i8ger4_tiles():
+    params = {"w": jnp.ones((96, 200), jnp.float32) * 0.01}
+    pp, stats = prepack_params_for_serving(params, min_size=1,
+                                           quantize=True)
+    po = pp["w"]
+    assert packing.is_packed(po) and po.quantized
+    assert po.dtype == jnp.int8 and po.col_sum is not None
+    assert stats["quantized"] == 1
+
+
+def test_model_forward_prepacked_bitwise_vlm():
+    """End-to-end: the qwen2-vl reduced model (vision patch-embed conv
+    stem + dense stack) with every weight prepacked is bitwise-identical
+    to the natural-layout forward."""
+    from repro.configs import get
+    from repro.configs.base import reduced
+    from repro.data import pipeline
+    from repro.models import model as M
+    cfg = reduced(get("qwen2-vl-7b"))
+    assert not cfg.frontend_stub and cfg.patch_size
+    params = M.init_params(cfg, jax.random.key(0))
+    b = pipeline.synthetic_batch(cfg, batch=2, seq=32, step=0)
+    batch = {kk: jnp.asarray(v) for kk, v in b.items()}
+    assert "images" in batch
+    with facility.configure(_pallas()):
+        nat, _, _ = M.forward(params, batch, cfg)
+        pp, stats = prepack_params_for_serving(params, min_size=1024)
+        assert stats["conv"] == 1 and stats["dense"] >= 4
+        pk, _, _ = M.forward(pp, batch, cfg)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(pk))
+
+
+def test_scan_layer_stack_slices_packed_leading_axis():
+    """lax.scan over a stacked packed weight: each slice is a fresh
+    PackedOperand (aux layout untouched) and contracts correctly."""
+    rng = np.random.default_rng(8)
+    L_, k, n = 3, 64, 136
+    w = jnp.asarray(rng.normal(size=(L_, k, n)), jnp.float32)
+    lay = packing.gemm_layout(Ger.F32GER, 8, n, k)
+    po = pack_gemm(w, lay)
+    x = jnp.asarray(rng.normal(size=(8, k)), jnp.float32)
+    plan = lowering.Plan(ger=Ger.F32GER, out_dtype=jnp.float32)
+
+    with facility.configure(_pallas()):
+        def body(carry, wl):
+            return carry, facility.contract("mk,kn->mn", x, wl, plan=plan)
+        _, packed_outs = jax.lax.scan(body, None, po)
+        nat = jnp.stack([facility.contract("mk,kn->mn", x, w[i], plan=plan)
+                         for i in range(L_)])
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(packed_outs))
+
+
+# ----------------------------------------------------------------------
+# PackedStore (blas3 twiddles)
+# ----------------------------------------------------------------------
+
+def test_packed_store_build_once_and_invalidate():
+    from repro.kernels import blas3
+    packing.STORE.invalidate(("dft.twiddle",))
+    before = dict(packing.COUNTERS)
+    w1 = blas3._twiddle(24, "float32")
+    w2 = blas3._twiddle(24, "float32")
+    assert w1 is w2                     # one build, then store hits
+    assert (packing.COUNTERS["store_build"]
+            == before.get("store_build", 0) + 1)
+    assert packing.COUNTERS["store_hit"] >= 1
+    n_dropped = packing.STORE.invalidate(("dft.twiddle",))
+    assert n_dropped >= 1
+    w3 = blas3._twiddle(24, "float32")
+    assert w3 is not w1
+    np.testing.assert_array_equal(w1[0], w3[0])
+
+
+def test_packed_store_prefix_invalidation_scopes():
+    s = packing.PackedStore()
+    s.get_or_build(("a", 1), lambda: "x")
+    s.get_or_build(("a", 2), lambda: "y")
+    s.get_or_build(("b", 1), lambda: "z")
+    assert s.invalidate(("a",)) == 2
+    assert len(s) == 1 and s.keys() == [("b", 1)]
+    assert s.invalidate(None) == 1
