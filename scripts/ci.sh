@@ -7,68 +7,26 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== facility-purity lint =="
-# facility.contract is the only sanctioned route to GEMM-shaped work:
-# raw jnp.dot/einsum/matmul may appear only inside the facility's own
-# lowering layer (core/facility.py, core/lowering.py), the architected
-# oracles (kernels/ref.py), and tests.
-if grep -rnE "jnp\.(dot|einsum|matmul)\(" src --include="*.py" \
-        | grep -vE "src/repro/core/(facility|lowering)\.py|src/repro/kernels/ref\.py"; then
-    echo "FAIL: raw jnp.dot/einsum/matmul outside the facility lowering layer" >&2
-    exit 1
-fi
-echo "facility purity OK"
+echo "== invariant checker: AST rules (repro.analysis) =="
+# The import-alias-aware AST pass owns every source-level contract this
+# script used to string-match: facility purity (any spelling of
+# dot/einsum/matmul, aliased imports, x.dot(y) method calls, the @
+# operator), lax purity, grid-owns-batch, attn-is-an-op-class, pack-once,
+# plus layer stratification, deprecated-shim usage, mutable default
+# arguments, and overbroad excepts.  Rule catalog: DESIGN.md section 10;
+# suppressions: `# repro: allow(<rule-id>)` at the flagged line.
+python -m repro.analysis src --json lint_report.json
+echo "AST invariants OK (lint_report.json)"
 
-# Same rule one layer down: raw lax.dot_general / lax.conv_general_dilated
-# belong to the lowering layer (core/lowering.py) and the kernels/oracles
-# (src/repro/kernels/) only — models and everything above must route conv
-# and GEMM work through facility.contract's op-classes.
-if grep -rnE "lax\.(dot_general|conv_general_dilated)\(" src --include="*.py" \
-        | grep -vE "src/repro/core/lowering\.py|src/repro/kernels/"; then
-    echo "FAIL: raw lax.dot_general/conv_general_dilated outside the" \
-         "lowering layer and kernels" >&2
-    exit 1
-fi
-echo "lax purity OK"
-
-# The grid owns batch: batched contractions fold the batch axis into the
-# Pallas grid ((b, i, j, k) BlockSpecs), so kernel dispatch in the lowering
-# layer must never wrap a kernel in jax.vmap (one launch per contraction,
-# autotune-cache keyed per (b, m, n, k)).
-if grep -nE "jax\.vmap|jax\.numpy\.vectorize" src/repro/core/lowering.py; then
-    echo "FAIL: jax.vmap around kernel dispatch in core/lowering.py —" \
-         "batch is a grid dimension of the Pallas kernel" >&2
-    exit 1
-fi
-echo "grid-owns-batch OK"
-
-# Attention is a registry op-class: models route it through
-# facility.contract(facility.ATTN, ...) (layers.sdpa), never the kernel
-# module directly — direct flash_attention calls are a deprecated shim.
-if grep -rnE "^[^#]*(import|from)[^#]*mma_attention" src/repro/models --include="*.py"; then
-    echo "FAIL: models/ imports mma_attention directly — attention" \
-         "dispatches through facility.contract's attn op-class" >&2
-    exit 1
-fi
-echo "attn-is-an-op-class OK"
-
-# Pack once, never per call: the lowering dispatch hot path must not
-# relayout weight operands.  Packed->natural conversions route through
-# core/packing.py's demote/refresh helpers only (never raw .unpack()/
-# pack_* in core/lowering.py), and the kernels consume packed panels via
-# BlockSpec index maps — no transpose/swapaxes of an operand per call.
-if grep -nE "\.unpack\(|pack_gemm\(|pack_conv\(" src/repro/core/lowering.py; then
-    echo "FAIL: per-call weight relayout in core/lowering.py — packed" \
-         "operands demote via packing.demote_op/refresh_* only" >&2
-    exit 1
-fi
-if grep -nE "jnp\.transpose\(|swapaxes\(" \
-        src/repro/kernels/mma_gemm.py src/repro/kernels/mma_conv.py; then
-    echo "FAIL: operand transpose inside the GEMM/conv kernels — layout" \
-         "changes are paid once at pack time (core/packing.py)" >&2
-    exit 1
-fi
-echo "pack-once-no-per-call-relayout OK"
+echo "== invariant checker: jaxpr contract audit =="
+# Traces every registered (op-class, ger, backend) lowering from the
+# registry (Pallas in interpret mode — nothing executes) and audits the
+# traced program: accumulator-dtype discipline on every dot_general,
+# zero-relayout between PackedOperand inputs and their pallas_call, no
+# pre-masked HBM operands feeding a kernel, and the static VMEM-residency
+# bound over the autotune candidate space.
+python -m repro.analysis --jaxpr-only
+echo "jaxpr invariants OK"
 
 echo "== tier-1 tests =="
 # tests/conftest.py escalates the deprecated shims' DeprecationWarnings to

@@ -1,0 +1,23 @@
+"""repro.analysis — the facility's invariant checker.
+
+Two passes over two representations:
+
+- ``astcheck``: import-alias-aware AST rules that subsume the grep
+  lints ``scripts/ci.sh`` used to carry (facility purity,
+  grid-owns-batch, pack-once, attn-is-an-op-class) and add the rules
+  greps cannot express (layer stratification over the import DAG,
+  deprecated-shim usage, mutable default arguments, overbroad excepts).
+- ``jaxpr_check``: traces registered lowerings straight out of the
+  registry per (op-class, ger, backend) and audits the traced program
+  for the semantic contracts (accumulator dtype, zero-relayout of
+  packed operands, no pre-masking in HBM, static VMEM residency).
+
+Run it: ``python -m repro.analysis [paths] [--json report.json]
+[--jaxpr | --jaxpr-only]``.  The rule catalog, suppression syntax, and
+registration workflow live in ``rules.py`` and DESIGN.md section 10.
+"""
+
+from repro.analysis.astcheck import Finding, check_paths, check_source
+from repro.analysis.rules import RULES
+
+__all__ = ["Finding", "check_paths", "check_source", "RULES"]

@@ -1,0 +1,70 @@
+"""CLI for the invariant checker: ``python -m repro.analysis``.
+
+Exit status 0 means every rule held (after honoring ``# repro:
+allow(...)`` suppressions); 1 means findings.  ``--json`` additionally
+writes a machine-readable report for CI artifacts.  The jaxpr audit
+imports jax and traces the registry, so it is split behind ``--jaxpr``
+(run both passes) / ``--jaxpr-only`` (skip the AST pass) to keep the
+default lint fast and dependency-light (stdlib ``ast`` only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import astcheck, rules
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST + jaxpr invariant checker for the facility")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write a machine-readable findings report")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also run the jaxpr contract audit")
+    ap.add_argument("--jaxpr-only", action="store_true",
+                    help="run only the jaxpr contract audit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the invariant catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in rules.RULES.values():
+            print(f"{rule.id:24s} [{rule.contract_pr}] {rule.summary}")
+        return 0
+
+    findings: list[astcheck.Finding] = []
+    if not args.jaxpr_only:
+        findings.extend(astcheck.check_paths(args.paths or ["src"]))
+    if args.jaxpr or args.jaxpr_only:
+        from repro.analysis import jaxpr_check
+        jfindings, audited, skipped = jaxpr_check.audit_registry()
+        findings.extend(jfindings)
+        print(f"jaxpr audit: {len(audited)} cell(s) audited, "
+              f"{len(skipped)} skipped", file=sys.stderr)
+        for where, why in skipped:
+            print(f"  skipped {where}: {why}", file=sys.stderr)
+
+    for f in findings:
+        print(f, file=sys.stderr)
+    if args.json:
+        report = {
+            "findings": [f.to_dict() for f in findings],
+            "count": len(findings),
+            "rules": sorted({f.rule for f in findings}),
+        }
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+    summary = (f"repro.analysis: {len(findings)} finding(s)"
+               if findings else "repro.analysis: clean")
+    print(summary, file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

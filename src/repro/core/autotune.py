@@ -234,7 +234,12 @@ def candidate_blocks(m: int, n: int, k: int, kind: precision.Ger,
                 if tup in seen:
                     continue
                 seen.add(tup)
-                if cfg.vmem_bytes(pol) <= vmem_budget:
+                # Budget on the working-set model, hard physical ceiling
+                # on the full BlockSpec residency (panels + acc scratch +
+                # out tile): a candidate that would not physically fit is
+                # rejected before anything is compiled or measured.
+                if (cfg.vmem_bytes(pol) <= vmem_budget
+                        and cfg.residency_bytes(pol) <= tiling.VMEM_BYTES):
                     fitting.append(cfg)
     heur = tiling.choose_blocks(m, n, k, kind, vmem_budget)
     if (heur.bm, heur.bn, heur.bk) not in seen:

@@ -41,6 +41,15 @@ Plan = lowering.Plan
 Dequant = lowering.Dequant
 ACC = lowering.ACC
 
+# The facility is the models' single import surface: the fused-epilogue
+# dataclass, the shared chunked-attention math, and the shim-deprecation
+# hook are all re-exported here (via lowering, which owns the kernels'
+# public names) so clients never reach past this layer.
+Epilogue = lowering.Epilogue
+make_epilogue = lowering.make_epilogue
+attend_chunk = lowering.attend_chunk
+deprecated_shim = lowering.deprecated_shim
+
 # The workhorse spec: contract the last axis of x with the first of w.
 DOT = "...k,kn->...n"
 
@@ -164,12 +173,10 @@ def fdot_fused(x: jnp.ndarray, w: jnp.ndarray, *,
     DESIGN.md), in acc dtype (fp32) rather than the cast-down activation
     dtype.
     """
-    from repro.kernels import epilogue as _epilogue
-
     lowering.deprecated_shim(
         "facility.fdot_fused", "contract(facility.DOT, x, w, "
         "plan=Plan(epilogue=Epilogue(...)), bias=..., residual=...)")
-    ep = _epilogue.make(bias=bias, activation=activation, residual=residual)
+    ep = make_epilogue(bias=bias, activation=activation, residual=residual)
     return contract(DOT, x, w, plan=Plan(ger=ger, out_dtype=out_dtype,
                                          epilogue=ep),
                     bias=bias, residual=residual)

@@ -69,9 +69,16 @@ from jax import lax
 
 from repro.core import precision
 from repro.core import packing as _packing
+from repro.kernels import epilogue as _epilogue_mod
 from repro.runtime import faults as _faults
 
 Ger = precision.Ger
+
+# Re-exported for the layers above: the lowering layer owns the kernels'
+# public surface, so facility (and through it the models) name the fused
+# epilogue without a layer-skipping import into repro.kernels.
+Epilogue = _epilogue_mod.Epilogue
+make_epilogue = _epilogue_mod.make
 
 # Sentinel for Plan.out_dtype: keep the accumulator dtype (what the kernel
 # entry points mean by ``out_dtype=None``, distinct from "facility default").
@@ -651,8 +658,10 @@ def _xla_gemm_impl(x, y, c, bias, residual, *, kind, dnums, out_perm,
     pol = precision.policy(kind)
     if pol.packed_int4:
         from repro.kernels import mma_gemm as _gemm
-        x = _gemm._unpack_int4(x, axis=dnums[0][0][0])
-        y = _gemm._unpack_int4(y, axis=dnums[0][1][0])
+        # int4 nibble *dtype decode* (I4GER8 stores two lanes per byte),
+        # not a tile relayout — pack-once governs layout, not precision.
+        x = _gemm._unpack_int4(x, axis=dnums[0][0][0])  # repro: allow(pack-once)
+        y = _gemm._unpack_int4(y, axis=dnums[0][1][0])  # repro: allow(pack-once)
     else:
         x = x.astype(pol.x_dtype)
         y = y.astype(pol.y_dtype)
@@ -876,6 +885,9 @@ def _lower_xla_saturating(op: Op):
     # One architected rank-r product group cannot overflow int32
     # (2 * 32767^2 < 2^31 - 1 for int16; 4 * 127 * 255 for int8), so group
     # products are exact in int32; only the accumulate saturates.
+    # K-group axis must lead for lax.scan; this reshapes the *already
+    # unpacked* saturating operand, not a tile layout.
+    # repro: allow(pack-once)
     xg = x2.reshape(m, k // r, r).swapaxes(0, 1).astype(jnp.int32)
     yg = y2.reshape(k // r, r, n).astype(jnp.int32)
 

@@ -64,6 +64,19 @@ class BlockConfig:
         panels = 2 * self.bk * (self.bm + self.bn) * pol.in_bytes
         return acc + panels
 
+    def residency_bytes(self, pol: precision.GerPolicy,
+                        out_bytes: int | None = None) -> int:
+        """Full BlockSpec-implied VMEM residency of one grid step.
+
+        ``vmem_bytes`` is the *working-set* model the budget heuristics
+        rank on (accumulator scratch + double-buffered panels); the out
+        BlockSpec additionally holds a (bm, bn) output tile in VMEM for
+        the deprime store.  This is the total the static audit
+        (``repro.analysis jaxpr-vmem-budget``) checks against the raw
+        per-core VMEM_BYTES before any candidate is compiled."""
+        ob = pol.acc_bytes if out_bytes is None else out_bytes
+        return self.vmem_bytes(pol) + self.bm * self.bn * ob
+
 
 def choose_blocks(m: int, n: int, k: int, ger: precision.Ger,
                   vmem_budget: int = VMEM_BUDGET) -> BlockConfig:

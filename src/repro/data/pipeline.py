@@ -85,7 +85,10 @@ class Prefetcher:
                                         step=step, seed=seed)
                     self._q.put((step, b))
                     step += 1
-            except BaseException as e:  # surfaced on next()
+            except BaseException as e:  # repro: allow(overbroad-except)
+                # Producer thread: everything (including SystemExit in
+                # the worker) must cross the thread boundary and re-raise
+                # on the consumer's next().
                 self._err.append(e)
 
         self._t = threading.Thread(target=work, daemon=True)

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import facility, lowering, packing
+from repro.core import facility, packing
 from repro.core.precision import Ger
 
 
@@ -34,8 +34,8 @@ def _ger(x, y, kind, acc=None, neg_product=False):
     kernel-lowered."""
     return facility.contract(
         "mk,kn->mn", x, y, acc=acc,
-        plan=lowering.Plan(ger=kind, neg_product=neg_product,
-                           backend="xla", out_dtype=lowering.ACC))
+        plan=facility.Plan(ger=kind, neg_product=neg_product,
+                           backend="xla", out_dtype=facility.ACC))
 
 
 def trsm(l: jnp.ndarray, b: jnp.ndarray, *, block: int = 64,
@@ -72,8 +72,8 @@ def _complex_contract(spec, ar, ai, br, bi, kind: Ger, backend):
     b = jax.lax.complex(br.astype(fdt), bi.astype(fdt))
     out = facility.contract(
         spec, a, b,
-        plan=lowering.Plan(ger=kind, backend=backend,
-                           out_dtype=lowering.ACC))
+        plan=facility.Plan(ger=kind, backend=backend,
+                           out_dtype=facility.ACC))
     return jnp.real(out), jnp.imag(out)
 
 

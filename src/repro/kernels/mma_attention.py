@@ -307,9 +307,12 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     ``attn`` op-class (a singleton head axis is added/stripped around the
     canonical (B, S, H, D) layout).
     """
-    from repro.core import facility, lowering, precision
+    # Deprecated shim: by definition it reaches up into the facility it
+    # predates.
+    # repro: allow(layer-stratification)
+    from repro.core import facility, precision
 
-    lowering.deprecated_shim(
+    facility.deprecated_shim(
         "mma_attention.flash_attention",
         "contract(facility.ATTN, q, k, v, plan=Plan(causal=..., "
         "block=(block_q, block_k)))")
@@ -344,6 +347,9 @@ def ref_attention(q, k, v, *, causal: bool = True,
     legacy (BH, S, D); returns the fp32 accumulator-dtype result.  Rows
     whose every slot is masked yield exact zeros — the facility's
     fully-masked-row convention shared by all three attn lowerings."""
+    # Facility-routed by design (the oracle exercises the architected
+    # path, XLA backend pinned).
+    # repro: allow(layer-stratification)
     from repro.core import facility, precision
 
     squeeze = q.ndim == 3

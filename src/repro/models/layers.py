@@ -13,8 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import facility
-from repro.core.facility import DOT, Plan
-from repro.kernels.epilogue import Epilogue
+from repro.core.facility import DOT, Epilogue, Plan
 from repro.parallel.api import shard
 
 # ----------------------------------------------------------------------
@@ -138,14 +137,14 @@ Q_CHUNK = 1024
 def _attend(q, k, v, q_pos, kv_pos, *, causal, window, valid):
     """One query block against full K/V.  q (B,C,H,D); q_pos (1|B, C).
 
-    Thin policy wrapper over ``lowering.attend_chunk`` — the ONE chunked-
+    Thin policy wrapper over ``facility.attend_chunk`` — the ONE chunked-
     attention implementation, shared with the xla attn lowering, so the
     ring-buffer decode path keeps the facility's conventions (notably:
     fully-masked rows yield exact zeros, never a uniform-softmax mean(V))."""
-    from repro.core import lowering, precision
+    from repro.core import precision
     cfg = facility.current()
     pol = precision.policy(cfg.ger)
-    out = lowering.attend_chunk(
+    out = facility.attend_chunk(
         q.astype(pol.x_dtype), k.astype(pol.x_dtype), v.astype(pol.y_dtype),
         q_pos=q_pos, kv_pos=kv_pos, causal=causal, window=window,
         valid=valid)

@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
-from repro.core.facility import DOT, Plan
+from repro.core.facility import DOT, Epilogue, Plan
 from repro.core.precision import Ger
-from repro.kernels.epilogue import Epilogue
 from repro.models import layers
 from repro.parallel.api import shard
 

@@ -292,8 +292,7 @@ def _vision_patch_embed(params, images, cfg):
     filter bank may arrive prepacked (``prepack_params_for_serving`` packs
     ``patch_w`` into its conv tile layout)."""
     from repro.core import facility
-    from repro.core.facility import Plan
-    from repro.kernels.epilogue import Epilogue
+    from repro.core.facility import Epilogue, Plan
     fe = params["vision_patch"]
     ps = cfg.patch_size
     h = facility.contract(
@@ -345,8 +344,7 @@ def _run_encoder(params, frames, cfg):
         h = _residual_shard(frames.astype(jnp.bfloat16))
     else:
         from repro.core import facility
-        from repro.core.facility import Plan
-        from repro.kernels.epilogue import Epilogue
+        from repro.core.facility import Epilogue, Plan
         fe = params["encoder"]["frontend"]
         gelu = Epilogue(bias=True, activation="gelu")
         h = facility.contract(

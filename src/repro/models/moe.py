@@ -18,8 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import facility
-from repro.core.facility import DOT, Plan
-from repro.kernels import epilogue as _epilogue
+from repro.core.facility import DOT, Epilogue, Plan
 from repro.models import layers
 from repro.parallel.api import shard
 
@@ -138,7 +137,7 @@ def apply_moe(p, x, cfg):
     # never mixes two gelu formulations between expert and dense paths).
     h1 = facility.contract(
         "ecd,edf->ecf", xe, p["w1"],
-        plan=Plan(epilogue=_epilogue.Epilogue(activation=cfg.act)))
+        plan=Plan(epilogue=Epilogue(activation=cfg.act)))
     h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
     if cfg.gated_mlp:
         h = h1 * facility.contract("ecd,edf->ecf", xe, p["w3"])

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import facility
+
 
 def pipeline_apply(stage_fn: Callable, params, x, *, mesh: Mesh,
                    axis: str = "stage", microbatches: int | None = None):
@@ -96,7 +98,14 @@ def make_pipelined_mlp(key, n_stages: int, d: int, d_ff: int):
     params = jax.vmap(init_one)(ks)
 
     def stage_fn(sp, h):
-        return h + jax.nn.gelu(h @ sp["w1"]) @ sp["w2"]
+        # Facility-routed (was raw `@`): F32GER + the xla backend is the
+        # same f32 dot_general with an f32 accumulator, and the per-stage
+        # dot stays a plain shardable dot_general under shard_map.
+        mm = functools.partial(
+            facility.contract, facility.DOT,
+            plan=facility.Plan(ger=facility.Ger.F32GER, backend="xla",
+                               out_dtype=jnp.float32))
+        return h + mm(jax.nn.gelu(mm(h, sp["w1"])), sp["w2"])
 
     def ref_apply(params, x):
         def body(h, sp):
