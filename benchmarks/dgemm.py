@@ -110,3 +110,38 @@ def run():
              f"us_packed={us_pack:.1f};"
              f"bitwise_equal={bitwise};"
              f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")
+
+    # ---- abft sweep: checksum-verified dispatch vs plain dispatch ----
+    # Both arms run the *eager* facility dispatch (verification needs
+    # concrete operands, so there is no jitted abft path to compare
+    # against); the delta is the detection tax: the kernel's checksum
+    # fold plus the reference colsum/rowsum contractions and the
+    # tolerance compare.  Recovery is free until a fault fires.
+    import dataclasses
+
+    from repro.core import facility
+
+    for n in (128, 256):
+        m, k = n, 128
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        plan = facility.Plan(backend="pallas")
+        plain = lambda a, c: facility.contract("mk,kn->mn", a, c,
+                                               plan=plan)
+
+        def verified(a, c):
+            with facility.configure(dataclasses.replace(
+                    facility.current(), guards=True, abft=True)):
+                return facility.contract("mk,kn->mn", a, c, plan=plan)
+
+        us_off = time_fn(plain, x, y)
+        us_on = time_fn(verified, x, y)
+        bitwise = int(bool(
+            (np.asarray(plain(x, y)) == np.asarray(verified(x, y)))
+            .all()))
+        overhead = (us_on - us_off) / us_off * 100.0
+        emit(f"abft_gemm_N{n}", us_on,
+             f"us_abft_on={us_on:.1f};"
+             f"us_abft_off={us_off:.1f};"
+             f"overhead_pct={overhead:.1f};"
+             f"bitwise_equal={bitwise}")

@@ -8,6 +8,9 @@ Rows:
     serve_prepacked — same run with every weight prepacked into its
                       kernel-native tile layout at admission
                       (core/packing.py; launch/serve.py --prepack)
+    serve_abft      — same run with ABFT checksum verification on
+                      (core/abft.py: eager checksum-verified decode; the
+                      SDC-detection cost the abft=False default avoids)
 
 Every row carries ``decode_tok_s`` — decode tokens over wall time, the
 steady-state serving throughput the prepacked path targets.
@@ -34,17 +37,23 @@ def run():
     params = M.init_params(cfg, jax.random.key(0))
     packed_params, _ = prepack_params_for_serving(params, min_size=1024)
 
-    def one(p, guards):
+    def one(p, guards, abft=False, reqs=REQS, gen=GEN):
         with facility.configure(dataclasses.replace(
-                facility.current(), guards=guards)):
+                facility.current(), guards=guards, abft=abft)):
             return serve_loop(cfg, p, batch=BATCH, prompt_len=PROMPT,
-                              gen_len=GEN, n_requests=REQS, guards=guards)
+                              gen_len=gen, n_requests=reqs,
+                              guards=guards, abft=abft)
 
-    rows = (("serve_decode", params, False),
-            ("serve_guarded", params, True),
-            ("serve_prepacked", packed_params, False))
-    for name, p, guards in rows:
-        out = one(p, guards)
+    # the abft row runs a smaller workload: checksum-verified decode is
+    # eager (every dispatch must be concrete), so each tick pays
+    # op-by-op dispatch on top of the verification math itself
+    rows = (("serve_decode", params, dict(guards=False)),
+            ("serve_guarded", params, dict(guards=True)),
+            ("serve_prepacked", packed_params, dict(guards=False)),
+            ("serve_abft", params, dict(guards=True, abft=True,
+                                        reqs=2, gen=6)))
+    for name, p, kw in rows:
+        out = one(p, **kw)
         us = out["wall_s"] / max(out["steps"], 1) * 1e6
         decode_tok_s = out["decode_tokens"] / max(out["wall_s"], 1e-9)
         common.emit(

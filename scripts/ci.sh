@@ -33,13 +33,15 @@ echo "== tier-1 tests =="
 # errors for in-repo (repro.*) callers.
 python -m pytest -x -q
 
-echo "== fault-matrix smoke (<180s) =="
+echo "== fault-matrix smoke (<240s) =="
 # The serving loop under a seeded fault schedule — one scenario per fault
 # kind (kernel raise, NaN poison, page exhaustion, latency spike, step
-# crash, transient alloc failure).  Each scenario must serve every
-# request exactly once (no drops, no duplicates) with the KV page pool
-# fully reclaimed; the runner exits nonzero otherwise.
-timeout 180 python -m repro.launch.serve --arch mamba2-130m \
+# crash, transient alloc failure, and sdc: a finite bit-flip on a gemm
+# dispatch that only ABFT checksum verification can see).  Each scenario
+# must serve every request exactly once (no drops, no duplicates) with
+# the KV page pool fully reclaimed — and the sdc scenario must report
+# abft_detections > 0; the runner exits nonzero otherwise.
+timeout 240 python -m repro.launch.serve --arch mamba2-130m \
     --batch 2 --prompt-len 8 --gen 6 --requests 4 --fault-matrix
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
@@ -68,6 +70,14 @@ for n in (128, 256):
     assert d["bitwise_equal"] == 1, (n, d)
     assert d["us_natural"] > 0 and d["us_packed"] > 0, (n, d)
 print("BENCH_dgemm.json OK: packed sweep bitwise-equal to natural layout")
+for n in (128, 256):
+    d = rows[f"abft_gemm_N{n}"]
+    # the checksum-verified dispatch must return the identical bytes and
+    # report its detection tax against the plain eager dispatch
+    assert d["bitwise_equal"] == 1, (n, d)
+    assert d["us_abft_on"] > 0 and d["us_abft_off"] > 0, (n, d)
+    assert "overhead_pct" in d, (n, d)
+print("BENCH_dgemm.json OK: abft rows bitwise-equal with overhead tracked")
 EOF
 
     echo "== attention benchmark smoke (<120s) =="
@@ -105,6 +115,11 @@ for name in ("serve_decode", "serve_guarded", "serve_prepacked"):
     assert d["decode_tok_s"] > 0, (name, d)
     assert d["completed"] == 8, (name, d)
     assert d["decode_tokens"] > 0, (name, d)
-print("BENCH_serving.json OK: prepacked serving completes with live decode tok/s")
+d = rows["serve_abft"]
+# the checksum-verified row runs a smaller request set (eager decode);
+# it must still complete all of it with live decode throughput
+assert d["decode_tok_s"] > 0, d
+assert d["completed"] == 2, d
+print("BENCH_serving.json OK: prepacked + abft serving complete with live decode tok/s")
 EOF
 fi

@@ -229,7 +229,22 @@ class Checker(ast.NodeVisitor):
                 self.report("deprecated-shim", node,
                             f"call to deprecated shim `{q}` — call "
                             "facility.contract instead")
+        if mod == rules.FAULT_MODULE and fn in rules.FAULT_HOOKS:
+            self._check_fault_point(node, fn)
         self._check_pack_once(node, fn)
+
+    def _check_fault_point(self, node: ast.Call, fn: str) -> None:
+        # Only literal strings are checkable statically; named constants
+        # (`_faults.CONTRACT_DISPATCH`) resolve to Attribute nodes and
+        # validate at runtime through FaultSpec.__post_init__ anyway.
+        arg = node.args[0] if node.args else next(
+            (kw.value for kw in node.keywords if kw.arg == "point"), None)
+        if (isinstance(arg, ast.Constant) and isinstance(arg.value, str)
+                and arg.value not in rules.FAULT_POINTS):
+            self.report("fault-point-literal", node,
+                        f"`faults.{fn}({arg.value!r})` — not a "
+                        "registered injection point; use a member of "
+                        "faults.POINTS (a typo'd literal never fires)")
 
     def _check_method_call(self, node: ast.Call, attr: str) -> None:
         if (attr in rules.CONTRACTION_FNS and node.args

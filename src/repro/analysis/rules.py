@@ -82,6 +82,11 @@ RULES: dict[str, Rule] = {r.id: r for r in [
          "calls evaluated once at def time) — the cfg=ElasticConfig() "
          "class of bug PR 6 fixed once",
          "PR 6"),
+    Rule("fault-point-literal",
+         "string literals handed to faults.fire / faults.maybe_inject "
+         "name registered injection points (members of faults.POINTS) — "
+         "a typo'd point validates nowhere and silently never fires",
+         "PR 9"),
     Rule("overbroad-except",
          "no bare `except:` / `except Exception:` / `except "
          "BaseException:` — failure handling catches the narrow "
@@ -126,6 +131,7 @@ CONTRACTION_MODULES = ("jax.numpy", "numpy")
 PURITY_SANCTIONED = frozenset({
     "repro.core.facility",
     "repro.core.lowering",
+    "repro.core.abft",          # checksum oracles (reference sums)
     "repro.kernels.ref",
 })
 
@@ -183,6 +189,15 @@ IMMUTABLE_DEFAULT_CTORS = frozenset({"tuple", "frozenset", "object"})
 
 # overbroad-except: exception names that catch too much.
 OVERBROAD_EXCEPTIONS = frozenset({"Exception", "BaseException"})
+
+# fault-point-literal: the injection hooks and the registered points.
+# POINTS is imported from the registry itself so the rule can never drift
+# from the runtime (a point added there is instantly legal here).
+from repro.runtime import faults as _faults  # noqa: E402  (config import)
+
+FAULT_MODULE = "repro.runtime.faults"
+FAULT_HOOKS = frozenset({"fire", "maybe_inject"})
+FAULT_POINTS = frozenset(_faults.POINTS)
 
 
 def stratum_of(module: str) -> int | None:

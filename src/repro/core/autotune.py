@@ -40,6 +40,7 @@ import json
 import os
 import pathlib
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -85,30 +86,50 @@ class AutotuneCache:
         self._entries: dict[str, dict] | None = None
         self._lock = threading.Lock()
 
+    # Transient-IO retry policy for cache *loads*: a contended or flaky
+    # filesystem read raises a one-off OSError that used to silently
+    # degrade every dispatch of this process to the heuristic.  Loads now
+    # retry a few times with exponential backoff before giving up; the
+    # fault hook is re-consulted per attempt so max_fires-bounded
+    # injections clear exactly like the transient they stand in for.
+    LOAD_RETRIES = 3
+    LOAD_BACKOFF_S = 0.001
+
     def _load(self) -> dict[str, dict]:
-        """Lazy read.  A missing, truncated, torn, or otherwise corrupt
-        cache file degrades to an empty store — dispatch falls back to the
-        heuristic — and HEALS on the next ``put_raw`` (which rewrites the
-        whole store atomically).  OSError covers unreadable files,
-        ValueError covers garbage JSON (json.JSONDecodeError is a
-        subclass) and non-dict blobs; nothing broader is swallowed."""
+        """Lazy read.  A missing file (the normal first-run state),
+        truncated/torn/garbage JSON (ValueError — json.JSONDecodeError is
+        a subclass), or a *persistent* OSError degrades to an empty store
+        — dispatch falls back to the heuristic — and HEALS on the next
+        ``put_raw`` (which rewrites the whole store atomically).  A
+        transient OSError is retried up to ``LOAD_RETRIES`` attempts with
+        ``LOAD_BACKOFF_S * 2**attempt`` backoff first; nothing broader is
+        swallowed."""
         if self._entries is None:
-            try:
-                fault = _faults.fire(_faults.AUTOTUNE_LOAD)
-                if fault is not None and fault.kind == _faults.RAISE:
-                    raise OSError("injected autotune.load failure")
-                blob = json.loads(self.path.read_text())
-                if not isinstance(blob, dict):
-                    raise ValueError(f"cache blob is {type(blob).__name__}")
-                if blob.get("version") == CACHE_VERSION:
-                    entries = blob.get("entries", {})
-                    if not isinstance(entries, dict):
-                        raise ValueError("cache entries is not a mapping")
-                    self._entries = dict(entries)
-                else:
+            for attempt in range(self.LOAD_RETRIES):
+                try:
+                    fault = _faults.fire(_faults.AUTOTUNE_LOAD)
+                    if fault is not None and fault.kind == _faults.RAISE:
+                        raise OSError("injected autotune.load failure")
+                    blob = json.loads(self.path.read_text())
+                    if not isinstance(blob, dict):
+                        raise ValueError(
+                            f"cache blob is {type(blob).__name__}")
+                    if blob.get("version") == CACHE_VERSION:
+                        entries = blob.get("entries", {})
+                        if not isinstance(entries, dict):
+                            raise ValueError(
+                                "cache entries is not a mapping")
+                        self._entries = dict(entries)
+                    else:
+                        self._entries = {}
+                except (FileNotFoundError, ValueError):
                     self._entries = {}
-            except (OSError, ValueError):
-                self._entries = {}
+                except OSError:
+                    if attempt + 1 < self.LOAD_RETRIES:
+                        time.sleep(self.LOAD_BACKOFF_S * (2 ** attempt))
+                        continue
+                    self._entries = {}
+                break
         return self._entries
 
     def get(self, key: str) -> tiling.BlockConfig | None:

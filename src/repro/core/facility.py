@@ -85,6 +85,16 @@ class FacilityConfig:
     # by default: the unguarded dispatch tail is bitwise-identical and
     # pays no detector sync.
     guards: bool = False
+    # ABFT checksum verification (DESIGN.md section 8, core/abft.py):
+    # guarded dispatch additionally verifies column/row checksums of each
+    # eligible contract output against its Huang–Abraham references, so
+    # *finite but wrong* outputs (silent data corruption) are a guard
+    # outcome too — retry once, then demote down the ladder.  Requires
+    # guards=True; kept a separate flag because attn/conv verification
+    # augments operands with a checksum column, which is
+    # tolerance-identical but not bitwise-identical to the plain path
+    # (guards alone stays bitwise-unchanged).
+    abft: bool = False
 
 
 _CONFIG = contextvars.ContextVar("mma_facility", default=FacilityConfig())

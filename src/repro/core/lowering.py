@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import abft as _abft
 from repro.core import precision
 from repro.core import packing as _packing
 from repro.kernels import epilogue as _epilogue_mod
@@ -625,11 +626,11 @@ def _combine_expanded(op: Op, prod, acc_seed, residual):
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "block", "interpret", "out_dtype", "epilogue", "neg_product",
-    "neg_acc", "alpha", "beta", "x_layout", "y_layout"))
+    "neg_acc", "alpha", "beta", "x_layout", "y_layout", "checksum"))
 def _pallas_gemm_impl(x, y, c, bias, residual, xmask, ymask, pmask, *,
                       kind, block, interpret, out_dtype, epilogue,
                       neg_product, neg_acc, alpha, beta,
-                      x_layout=None, y_layout=None):
+                      x_layout=None, y_layout=None, checksum=False):
     from repro.kernels import mma_gemm as _gemm
     pol = precision.policy(kind)
     # Packed operands arrive as their raw tile arrays; the elementwise
@@ -646,7 +647,8 @@ def _pallas_gemm_impl(x, y, c, bias, residual, xmask, ymask, pmask, *,
                           alpha=alpha, beta=beta,
                           ep=ep, bias=bias, residual=residual, masks=masks,
                           out_dtype=out_dtype, interpret=interpret,
-                          x_layout=x_layout, y_layout=y_layout)
+                          x_layout=x_layout, y_layout=y_layout,
+                          checksum=checksum)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -713,7 +715,7 @@ def _lower_pallas_gemm(op: Op):
             if op.residual is not None else None)
     acc2 = op.acc.reshape(norm) if op.acc is not None else None
 
-    def one(kind, xi, yi, c, ep, out_dtype, *, forms=True):
+    def one(kind, xi, yi, c, ep, out_dtype, *, forms=True, checksum=False):
         use_ep = ep is not None and not ep.is_identity
         return _pallas_gemm_impl(
             xi, yi, c, op.bias if use_ep else None,
@@ -724,10 +726,20 @@ def _lower_pallas_gemm(op: Op):
             neg_acc=op.neg_acc and forms,
             alpha=op.alpha if forms else 1.0,
             beta=op.beta if forms else 1.0,
-            x_layout=xl, y_layout=yl)
+            x_layout=xl, y_layout=yl, checksum=checksum)
 
     if len(passes) == 1:
         xi, yi, kind = passes[0]
+        slot = _abft.capture_slot()
+        if slot is not None and op.masks is None:
+            # ABFT-verified dispatch: fold the per-tile column/row sums
+            # into the kernel's deprime store and hand the reduced
+            # checksum vectors to the dispatcher's capture slot — no
+            # second HBM read of the output.
+            out, ckc, ckr = one(kind, xi, yi, acc2, op.epilogue,
+                                op.out_dtype, checksum=True)
+            _abft.deposit(slot, ckc, ckr)
+            return assemble(out)
         out = one(kind, xi, yi, acc2, op.epilogue, op.out_dtype)
         return assemble(out)
 
@@ -1499,6 +1511,7 @@ def quarantine_state() -> dict:
 def clear_guard_state() -> None:
     _QUARANTINE.clear()
     GUARD_EVENTS.clear()
+    _abft.clear_verdicts()
 
 
 def _output_finite(out) -> bool:
@@ -1525,8 +1538,22 @@ def _record_demotion(key, frm, to, reason, op_class, spec):
                        op_class, spec, frm, to, reason)
 
 
+def _apply_data_fault(fault, out):
+    """Apply the data-shaped fault kinds to a lowering output.  ``flip``
+    skips tracers: a trace-time flip would bake permanent corruption into
+    the compiled function (the ``nan`` kind covers trace-time poisoning)."""
+    if fault is None:
+        return out
+    if fault.kind == _faults.NAN:
+        return _faults.poison(out)
+    if fault.kind == _faults.FLIP \
+            and not isinstance(out, jax.core.Tracer):
+        return _faults.flip(out, fault.seed)
+    return out
+
+
 def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
-                      fused: bool):
+                      fused: bool, abft_on: bool = False):
     """Walk the ladder from ``backend`` (or its quarantined demotion)
     until a rung returns a clean output.
 
@@ -1538,7 +1565,12 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
         quarantine commits only if a later rung produces finite output
         (otherwise the NaN is input-borne and no rung is at fault);
       * the final rung's non-finite output is returned as-is, without
-        quarantine — ref is ground truth, garbage-in stays garbage-out.
+        quarantine — ref is ground truth, garbage-in stays garbage-out;
+      * with ABFT on (``FacilityConfig.abft``, core/abft.py) a rung whose
+        output fails checksum verification is retried ONCE on the same
+        rung (transient SDC clears), then demoted *pending* like the
+        non-finite case; the final rung's mismatch is returned as-is
+        with an unrecovered verdict on ``abft.VERDICTS``.
     """
     key = guard_key(op_class, op)
     start = _QUARANTINE.get(key, backend)
@@ -1550,18 +1582,44 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
         raise NotImplementedError(
             f"no lowering registered on any ladder rung for "
             f"({op_class!r}, {ger}, fused={fused})")
+    aplan = None
+    if abft_on:
+        conv_dw = (op_class == "conv"
+                   and _CONV_SPECS.get(op.spec, (0, False))[1])
+        aplan = _abft.plan_for(op, op_class,
+                               expanded=expansion_for(ger) is not None,
+                               conv_depthwise=conv_dw)
+
+    def attempt(fn, sub):
+        """One guarded execution: inject, run (checksum-instrumented when
+        a verification plan is active), apply data-shaped faults.
+        Returns (out, raw, cap): ``out`` is the caller-visible output,
+        ``raw`` the array verification checks (augmented checksum channel
+        intact), ``cap`` the Pallas kernel-sidecar capture."""
+        fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
+        cap = None
+        if aplan is not None and aplan.augments:
+            raw = fn(aplan.augment(sub))
+        elif aplan is not None:
+            with _abft.capture() as cap:
+                raw = fn(sub)
+        else:
+            raw = fn(sub)
+        raw = _apply_data_fault(fault, raw)
+        out = aplan.strip(raw) if aplan is not None and aplan.augments \
+            else raw
+        return out, raw, cap
+
     last_exc = None
     pending_nonfinite = False
+    pending_mismatch = False
     for i, rung in enumerate(attempts):
         fn = lookup(rung, op_class, ger, fused)
         sub = op if rung == op.backend \
             else dataclasses.replace(op, backend=rung)
         nxt = attempts[i + 1] if i + 1 < len(attempts) else None
         try:
-            fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
-            out = fn(sub)
-            if fault is not None and fault.kind == _faults.NAN:
-                out = _faults.poison(out)
+            out, raw, cap = attempt(fn, sub)
         except (_faults.InjectedFault,) + LOWERING_ERRORS as e:
             last_exc = e
             if nxt is None:
@@ -1570,19 +1628,64 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
                              op_class, op.spec)
             _QUARANTINE[key] = nxt
             continue
-        if _output_finite(out):
-            if rung != backend and pending_nonfinite:
-                # non-finite demotions commit only on a clean lower rung
-                _QUARANTINE[key] = rung
-            DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
-            return out
-        if nxt is None:
-            # ref itself is non-finite: input-borne NaN, nobody's fault
-            DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
-            return out
-        pending_nonfinite = True
-        _record_demotion(key, rung, nxt, "non-finite output",
-                         op_class, op.spec)
+        if not _output_finite(out):
+            if nxt is None:
+                # ref itself is non-finite: input-borne NaN, nobody's fault
+                DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
+                return out
+            pending_nonfinite = True
+            _record_demotion(key, rung, nxt, "non-finite output",
+                             op_class, op.spec)
+            continue
+        if aplan is not None and not isinstance(out, jax.core.Tracer):
+            ok, detail = aplan.check(raw, cap)
+            if not ok:
+                # Retry the SAME rung once: transient SDC (a one-shot
+                # upset) clears; the retry re-consults the fault plan, so
+                # max_fires-bounded injections clear exactly like the
+                # hardware fault they stand in for.
+                retried = None
+                try:
+                    retried = attempt(fn, sub)
+                except (_faults.InjectedFault,) + LOWERING_ERRORS as e:
+                    last_exc = e
+                if retried is not None:
+                    out2, raw2, cap2 = retried
+                    if _output_finite(out2) \
+                            and aplan.check(raw2, cap2)[0]:
+                        _abft.record_verdict(
+                            key=key, op_class=op_class, spec=op.spec,
+                            rung=rung, recovered=True, how="retry",
+                            detail=detail)
+                        if rung != backend and (pending_nonfinite
+                                                or pending_mismatch):
+                            _QUARANTINE[key] = rung
+                        DISPATCH_COUNTS[(rung, op_class,
+                                         ger.value)] += 1
+                        return out2
+                if nxt is None:
+                    # ground truth disagrees with its own checksums:
+                    # return it, but tell the serving loop (it discards
+                    # the step and requeues the slots).
+                    _abft.record_verdict(
+                        key=key, op_class=op_class, spec=op.spec,
+                        rung=rung, recovered=False, how="exhausted",
+                        detail=detail)
+                    DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
+                    return retried[0] if retried is not None else out
+                pending_mismatch = True
+                _record_demotion(key, rung, nxt, "checksum-mismatch",
+                                 op_class, op.spec)
+                continue
+        if rung != backend and (pending_nonfinite or pending_mismatch):
+            # data-borne demotions commit only on a clean lower rung
+            _QUARANTINE[key] = rung
+        if pending_mismatch:
+            _abft.record_verdict(
+                key=key, op_class=op_class, spec=op.spec, rung=rung,
+                recovered=True, how="demote", detail=None)
+        DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
+        return out
     raise last_exc  # pragma: no cover — loop always returns or raises
 
 
@@ -1874,7 +1977,8 @@ def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
             q_offset=plan.q_offset, q_chunk=plan.q_chunk)
     if getattr(cfg, "guards", False):
         out = _guarded_dispatch(op, op_class, backend, ger,
-                                not ep.is_identity)
+                                not ep.is_identity,
+                                abft_on=getattr(cfg, "abft", False))
     else:
         # The unguarded fast path: with no fault plan installed this is
         # ONE contextvar read away from `fn(op)` — bitwise-identical
@@ -1882,8 +1986,7 @@ def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
         DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
         fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
         out = fn(op)
-        if fault is not None and fault.kind == _faults.NAN:
-            out = _faults.poison(out)
+        out = _apply_data_fault(fault, out)
     if dequant is not None:
         out = dequant.apply(out)
         out = out.astype(out_dtype) if out_dtype is not None else out

@@ -55,7 +55,9 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                  has_c, alpha, beta, ep: _epilogue.Epilogue | None = None,
                  batched: bool = False,
                  has_masks=(False, False, False),
-                 x_lead: int | None = None, y_lead: int | None = None):
+                 x_lead: int | None = None, y_lead: int | None = None,
+                 checksum: bool = False,
+                 m_size: int = 0, n_size: int = 0):
     ep = ep if ep is not None and not ep.is_identity else None
     has_xm, has_ym, has_pm = has_masks
     # Leading singleton block dims to strip per operand read: 1 for a
@@ -82,8 +84,17 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
         pos += bool(ep and ep.bias)
         res_ref = refs[pos] if ep and ep.residual else None
         pos += bool(ep and ep.residual)
-        out_ref, acc_ref = refs[pos:]
+        if checksum:
+            out_ref, ckc_ref, ckr_ref, acc_ref = refs[pos:]
+        else:
+            out_ref, acc_ref = refs[pos:]
+            ckc_ref = ckr_ref = None
         ki = pl.program_id(3 if batched else 2)
+        if checksum:
+            # grid indices read at kernel top level (program_id has no
+            # lowering inside the pl.when-traced store body on interpret)
+            ti = pl.program_id(1 if batched else 0)
+            tj = pl.program_id(2 if batched else 1)
 
         # ---- prime the accumulator (xxsetaccz / accumulate forms) ----
         @pl.when(ki == 0)
@@ -148,6 +159,32 @@ def _make_kernel(*, pol, k_steps, k_size, bk_logical, neg_product, neg_acc,
                     out, ep,
                     bias=bias_ref[...] if bias_ref is not None else None,
                     residual=res)
+            if checksum:
+                # ABFT sidecar (core/abft.py): fold the tile's column and
+                # row sums into the deprime — one extra VMEM row + col per
+                # resident accumulator tile, summed in acc dtype before
+                # the out-dtype cast, never re-reading the stored output.
+                # The m/n fringe lanes are masked out (their stores are
+                # dropped, but their accumulator lanes saw undefined
+                # operand reads and must not poison the sums).
+                val = out
+                bm_t, bn_t = val.shape
+                if (m_size % bm_t) != 0:
+                    rm = ti * bm_t + jax.lax.broadcasted_iota(
+                        jnp.int32, (bm_t, 1), 0)
+                    val = jnp.where(rm < m_size, val, jnp.zeros_like(val))
+                if (n_size % bn_t) != 0:
+                    cn = tj * bn_t + jax.lax.broadcasted_iota(
+                        jnp.int32, (1, bn_t), 1)
+                    val = jnp.where(cn < n_size, val, jnp.zeros_like(val))
+                ck_col = val.sum(axis=0, keepdims=True)   # (1, bn)
+                ck_row = val.sum(axis=1, keepdims=True)   # (bm, 1)
+                if batched:
+                    ckc_ref[0] = ck_col
+                    ckr_ref[0] = ck_row
+                else:
+                    ckc_ref[...] = ck_col
+                    ckr_ref[...] = ck_row
             out = out.astype(out_ref.dtype)
             if batched:
                 out_ref[0] = out
@@ -168,7 +205,8 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
              residual: jnp.ndarray | None = None,
              masks: tuple | None = None,
              out_dtype=None, interpret: bool = False,
-             x_layout=None, y_layout=None) -> jnp.ndarray:
+             x_layout=None, y_layout=None,
+             checksum: bool = False) -> jnp.ndarray:
     """C <- alpha * [-](X @ Y)  [+ beta * (+/-)C]  with resident accumulator.
 
     x: (M, K) or batched (B, M, K); y: (K, N) / (B, K, N); c: optional
@@ -195,6 +233,13 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
     ``masks`` carries the pm* prefixed-form predicates ``(xmask, ymask,
     pmask)`` — shapes (M,), (N,), (K,), bool, each optional — applied to
     the streamed panels inside the kernel (paper section II-C).
+
+    ``checksum=True`` folds ABFT column/row sums into the deprime store
+    (core/abft.py): returns ``(out, ck_col, ck_row)`` where ``ck_col`` is
+    ``((B,) gm, N)`` per-tile column sums and ``ck_row`` ``((B,) M, gn)``
+    per-tile row sums, both in acc dtype and summed *before* the
+    out-dtype cast.  The main output is bitwise-identical to the
+    ``checksum=False`` call.
     """
     pol = precision.policy(kind)
     if kind == precision.Ger.F32GER_3XBF16:
@@ -350,15 +395,31 @@ def mma_gemm(x: jnp.ndarray, y: jnp.ndarray,
         neg_product=neg_product, neg_acc=neg_acc, has_c=c is not None,
         alpha=alpha, beta=beta, ep=ep, batched=batched,
         has_masks=(xm is not None, ym is not None, pm is not None),
-        x_lead=lead(x_layout), y_lead=lead(y_layout))
+        x_lead=lead(x_layout), y_lead=lead(y_layout),
+        checksum=checksum, m_size=m, n_size=n)
 
     out_shape = (b, m, n) if batched else (m, n)
+    out_specs = bspec((bm, bn), lambda i, j, kk: (i, j), with_b=True)
+    out_shapes = jax.ShapeDtypeStruct(out_shape, out_dtype)
+    if checksum:
+        gm, gn = grid2d[0], grid2d[1]
+        ck = lambda s: (b,) + s if batched else s
+        out_specs = [
+            out_specs,
+            bspec((1, bn), lambda i, j, kk: (i, j), with_b=True),
+            bspec((bm, 1), lambda i, j, kk: (i, j), with_b=True),
+        ]
+        out_shapes = [
+            out_shapes,
+            jax.ShapeDtypeStruct(ck((gm, n)), pol.acc_dtype),
+            jax.ShapeDtypeStruct(ck((m, gn)), pol.acc_dtype),
+        ]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=bspec((bm, bn), lambda i, j, kk: (i, j), with_b=True),
-        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((bm, bn), pol.acc_dtype)],
         interpret=interpret,
     )(*inputs)

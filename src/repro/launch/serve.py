@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.configs import get as get_arch, ARCHS
 from repro.configs.base import reduced as reduce_cfg
+from repro.core import abft as _abft
 from repro.core import facility, lowering
 from repro.models import model as M
 from repro.runtime import faults as _faults
@@ -114,6 +115,7 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
                page_size: int = 16, total_pages: int | None = None,
                deadline_steps: int | None = None, max_retries: int = 2,
                backoff_steps: int = 2, guards: bool | None = None,
+               abft: bool | None = None,
                max_steps: int | None = None) -> dict:
     """Serve ``n_requests`` synthetic prompts through a ``batch``-slot
     continuous-batching decode loop.  Returns a stats dict (superset of
@@ -122,11 +124,51 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
     Every request ends in exactly one of ``completed`` / ``rejected`` /
     ``failed``; duplicates raise :class:`ServeError` and the page ledger
     is proven quiescent before returning.
+
+    ``abft`` (default: the ambient ``FacilityConfig.abft``) turns on
+    checksum-verified decode: the decode step runs EAGERLY so every
+    contract dispatch sees concrete values (core/abft.py skips tracers),
+    and the loop drains ``abft.VERDICTS`` each tick — a tick with an
+    *unrecovered* verdict is discarded and its slots are preempted and
+    requeued (pages reclaimed exactly once) instead of serving corrupted
+    continuations.  Prefill stays jitted; its one-time trace is warmed
+    under an empty fault plan so trace-time compilation can neither
+    consume injected faults nor bake one into the compiled function.
     """
     if guards is None:
         guards = facility.current().guards
-    serve_step = jax.jit(S.make_serve_step(cfg))
+    if abft is None:
+        abft = getattr(facility.current(), "abft", False)
+    fac = facility.current()
+    if abft and not (fac.guards and fac.abft):
+        # an explicit abft=True must arm the dispatch layer too: checksum
+        # verification lives in guarded dispatch, which consults the
+        # ambient FacilityConfig, not this loop's flags
+        with facility.configure(dataclasses.replace(
+                fac, guards=True, abft=True)):
+            return serve_loop(
+                cfg, params, batch=batch, prompt_len=prompt_len,
+                gen_len=gen_len, n_requests=n_requests, seed=seed,
+                page_size=page_size, total_pages=total_pages,
+                deadline_steps=deadline_steps, max_retries=max_retries,
+                backoff_steps=backoff_steps, guards=True, abft=True,
+                max_steps=max_steps)
+    decode_fn = S.make_serve_step(cfg)
+    if abft:
+        def serve_step(p, c, t):
+            # eager + python-looped layer stack: every in-layer contract
+            # dispatch is concrete, so checksum verification sees it
+            with M.eager_layers():
+                return decode_fn(p, c, t)
+    else:
+        serve_step = jax.jit(decode_fn)
     prefill_step = jax.jit(S.make_prefill_step(cfg))
+    if abft:
+        _abft.clear_verdicts()
+        with _faults.install(_faults.FaultPlan()):
+            jax.block_until_ready(prefill_step(
+                params,
+                {"tokens": jnp.zeros((1, max(1, prompt_len)), jnp.int32)}))
 
     # Pool sized so the default run never queues: full footprint x batch.
     worst = max(1, -(-(prompt_len + gen_len) // page_size))
@@ -157,6 +199,9 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
     step_faults = 0
     nan_steps = 0
     alloc_faults = 0
+    abft_detections = 0
+    abft_recoveries = 0
+    abft_discards = 0
     if max_steps is None:
         max_steps = (n_requests * (gen_len + prompt_len) * (max_retries + 2)
                      + 200)
@@ -243,7 +288,21 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
                 if fault is not None and fault.kind == _faults.NAN:
                     logits = _faults.poison(logits)
                 step_ok = True
-                if guards:
+                unrecovered = False
+                if abft:
+                    # checksum verdicts from this tick's eager dispatches
+                    verdicts = _abft.drain_verdicts()
+                    abft_detections += len(verdicts)
+                    good = sum(1 for v in verdicts if v["recovered"])
+                    abft_recoveries += good
+                    if good < len(verdicts):
+                        # SDC survived the whole ladder: the tick's values
+                        # are untrustworthy — discard it and requeue the
+                        # slots rather than serve corrupted continuations
+                        unrecovered = True
+                        step_ok = False
+                        abft_discards += 1
+                if guards and step_ok:
                     rows = jnp.asarray(logits)[jnp.asarray(active)]
                     if not bool(jnp.isfinite(rows).all()):
                         # poisoned output: discard the tick (no tokens
@@ -260,6 +319,24 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
                 steps += 1
                 for s in active:
                     slot_age[s] += 1
+                if unrecovered:
+                    # preempt every slot that decoded through the corrupt
+                    # tick: pages reclaimed exactly once, request requeued
+                    # with backoff (re-prefill rebuilds clean state)
+                    for s in active:
+                        req = slot_req[s]
+                        if req is None:
+                            continue
+                        pool.free(req.rid)
+                        slot_req[s] = None
+                        preemptions += 1
+                        req.retries += 1
+                        req.generated = 0
+                        if req.retries > req.max_retries:
+                            finish(req, failed, steps)
+                        else:
+                            requeues += 1
+                            waiting.append((steps + backoff_steps, req))
         else:
             # nothing decodable this tick (everyone in backoff or blocked
             # on pages) — the clock must still advance so waiters drain
@@ -304,6 +381,9 @@ def serve_loop(cfg, params, *, batch: int, prompt_len: int, gen_len: int,
         "preemptions": preemptions, "requeues": requeues,
         "step_faults": step_faults, "nan_steps": nan_steps,
         "alloc_faults": alloc_faults,
+        "abft_detections": abft_detections,
+        "abft_recoveries": abft_recoveries,
+        "abft_discards": abft_discards,
         "latency_p50_steps": lat[len(lat) // 2],
         "latency_p99_steps": lat[min(len(lat) - 1,
                                      int(len(lat) * 0.99))],
@@ -340,6 +420,13 @@ def _matrix_scenarios():
         # transient allocator failure: admission requeues with backoff
         ("alloc-fault", [F(point=_faults.KV_ALLOC, kind=_faults.RAISE,
                            max_fires=2)], {}),
+        # silent data corruption: a finite single-element flip on contract
+        # outputs — invisible to the NaN guard, only ABFT checksum
+        # verification (core/abft.py) sees it.  The burst (3 fires) spans
+        # one dispatch's retry + demotion walk, so detection recovers
+        # within the tick and serving continues on clean rungs.
+        ("sdc", [F(point=_faults.CONTRACT_DISPATCH, kind=_faults.FLIP,
+                   every=1, max_fires=3)], {"abft": True}),
     )
 
 
@@ -357,7 +444,8 @@ def run_fault_matrix(cfg, params, *, batch=2, prompt_len=8, gen_len=6,
         plan = _faults.FaultPlan(specs, seed=seed)
         lowering.clear_guard_state()
         with facility.configure(dataclasses.replace(
-                facility.current(), guards=True)):
+                facility.current(), guards=True,
+                abft=bool(opts.get("abft", False)))):
             with _faults.install(plan):
                 out = serve_loop(
                     cfg, params, batch=batch, prompt_len=prompt_len,
@@ -366,6 +454,10 @@ def run_fault_matrix(cfg, params, *, batch=2, prompt_len=8, gen_len=6,
                     deadline_steps=gen_len * 6, max_retries=3)
         ok = (out["completed"] == n_requests and out["rejected"] == 0
               and out["failed"] == 0)
+        if opts.get("abft"):
+            # the sdc scenario must actually *detect* the corruption, not
+            # merely survive it
+            ok = ok and out["abft_detections"] > 0
         results.append({"scenario": name, "ok": ok,
                         "fired": len(plan.events),
                         "demotions": len(lowering.GUARD_EVENTS), **out})
@@ -384,6 +476,11 @@ def main():
     ap.add_argument("--pages", type=int, default=None)
     ap.add_argument("--deadline", type=int, default=None)
     ap.add_argument("--guards", action="store_true")
+    ap.add_argument("--abft", action="store_true",
+                    help="checksum-verified decode (core/abft.py): eager "
+                         "decode step, per-tick verdict drain, corrupted "
+                         "ticks discarded and their slots requeued "
+                         "(implies --guards)")
     ap.add_argument("--prepack", action="store_true",
                     help="pack weights into kernel-native tile layouts at "
                          "admission (core/packing.py); kernels then stream "
@@ -420,9 +517,10 @@ def main():
               f"request served exactly once, pages fully reclaimed")
         return
 
-    guards = args.guards
+    guards = args.guards or args.abft
     with facility.configure(dataclasses.replace(facility.current(),
-                                                guards=guards)):
+                                                guards=guards,
+                                                abft=args.abft)):
         out = serve_loop(cfg, params, batch=args.batch,
                          prompt_len=args.prompt_len, gen_len=args.gen,
                          n_requests=args.requests, page_size=args.page_size,

@@ -21,6 +21,8 @@ structural causal/window grid bounds cannot apply).
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 from typing import Any
 
@@ -42,7 +44,36 @@ Params = Any
 SCAN_UNROLL = False
 
 
+# ABFT serving (core/abft.py) needs every in-layer contract dispatch to
+# see CONCRETE operands — checksum verification skips tracers — but a
+# lax.scan traces its body once, so every contract inside the layer stack
+# is invisible to it.  ``eager_layers()`` swaps the scan for a python
+# loop over the stacked pytree for the dynamic extent of the block
+# (decode steps are one token; the O(depth) eager cost is the documented
+# price of verified decode, launch/serve.py --abft).
+_EAGER_LAYERS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_eager_layers", default=False)
+
+
+@contextlib.contextmanager
+def eager_layers():
+    token = _EAGER_LAYERS.set(True)
+    try:
+        yield
+    finally:
+        _EAGER_LAYERS.reset(token)
+
+
 def layer_scan(body, init, xs):
+    if _EAGER_LAYERS.get():
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        carry, ys = init, []
+        for i in range(n):
+            carry, y = body(carry,
+                            jax.tree_util.tree_map(lambda a: a[i], xs))
+            ys.append(y)
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+        return carry, ys
     return jax.lax.scan(body, init, xs, unroll=SCAN_UNROLL or 1)
 
 

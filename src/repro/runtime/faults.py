@@ -45,6 +45,12 @@ Fault kinds and who applies them:
   * ``torn`` — the call site truncates its in-flight write with
     :func:`tear` (a crash mid-write; atomic-rename protocols must make
     this invisible to readers).
+  * ``flip`` — the call site perturbs ONE seeded element of its float
+    output with :func:`flip` (silent data corruption that *stays
+    finite*, so the NaN/Inf guards cannot see it — only checksum
+    verification, core/abft.py, can).  The flipped index and delta are
+    drawn from the plan's seeded generator at fire time and carried on
+    ``Fault.seed``, so a run is bit-reproducible given the plan seed.
 """
 
 from __future__ import annotations
@@ -76,8 +82,9 @@ RAISE = "raise"
 NAN = "nan"
 LATENCY = "latency"
 TORN = "torn"
+FLIP = "flip"
 
-KINDS = (RAISE, NAN, LATENCY, TORN)
+KINDS = (RAISE, NAN, LATENCY, TORN, FLIP)
 
 
 class InjectedFault(RuntimeError):
@@ -117,6 +124,9 @@ class Fault:
     kind: str
     step: int | None
     latency_s: float
+    # ``flip`` kinds only: the per-fire seed for :func:`flip` (drawn from
+    # the plan's generator, so the corrupted element is reproducible).
+    seed: int | None = None
 
 
 class FaultPlan:
@@ -171,8 +181,11 @@ class FaultPlan:
         for i in idxs:
             if self._triggers(i, self.specs[i], step):
                 self._fires[i] += 1
+                seed = (int(self._rng.integers(2 ** 31))
+                        if self.specs[i].kind == FLIP else None)
                 fault = Fault(point=point, kind=self.specs[i].kind,
-                              step=step, latency_s=self.specs[i].latency_s)
+                              step=step, latency_s=self.specs[i].latency_s,
+                              seed=seed)
                 self.events.append(fault)
                 return fault
         return None
@@ -237,6 +250,26 @@ def poison(x):
     if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
         return x
     return jnp.full_like(x, jnp.nan)
+
+
+def flip(x, seed: int):
+    """Perturb ONE seeded element of a float array by a finite,
+    magnitude-dominating delta — a silent-data-corruption fault (a
+    flipped mantissa/exponent bit in a kernel's output path).  Unlike
+    :func:`poison` the result stays finite everywhere, so non-finite
+    guards pass; only checksum verification can tell.  Non-float arrays
+    pass through unchanged.  The same ``seed`` always corrupts the same
+    element by the same delta."""
+    import jax.numpy as jnp
+    arr = jnp.asarray(x)
+    if not jnp.issubdtype(arr.dtype, jnp.inexact) or arr.size == 0:
+        return x
+    idx = int(np.random.default_rng(seed).integers(arr.size))
+    flat = arr.reshape(-1)
+    mag = jnp.max(jnp.abs(flat))
+    mag = jnp.where(jnp.isfinite(mag), mag, jnp.zeros_like(mag))
+    delta = ((1.0 + mag) * 8.0).astype(arr.dtype)
+    return flat.at[idx].add(delta).reshape(arr.shape)
 
 
 def tear(path) -> bool:

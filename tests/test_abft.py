@@ -1,0 +1,271 @@
+"""ABFT checksummed contract execution (core/abft.py + guarded dispatch).
+
+The guard ladder's blind spot before this subsystem: a fault that leaves
+the output *finite but wrong* (silent data corruption) passed the
+NaN/Inf detector untouched.  These tests pin the contract: with
+``FacilityConfig.abft`` on, an injected ``flip`` on a gemm dispatch is
+detected by checksum verification and recovered to the bitwise-correct
+result (same-rung retry first, then demotion with quarantine); with it
+off, the same flip demonstrably sails through — the gap the subsystem
+closes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import abft, facility, lowering, packing
+from repro.core.precision import Ger
+from repro.runtime import faults
+
+Plan = facility.Plan
+PALLAS = Plan(backend="pallas")
+
+
+@pytest.fixture(autouse=True)
+def _clean_guard_state():
+    lowering.clear_guard_state()
+    yield
+    lowering.clear_guard_state()
+
+
+def _xy(m=16, k=32, n=16, seed=0, dtype=jnp.float32):
+    kx, ky = jax.random.split(jax.random.key(seed))
+    return (jax.random.normal(kx, (m, k), dtype),
+            jax.random.normal(ky, (k, n), dtype))
+
+
+def _abft_cfg(**over):
+    return facility.configure(dataclasses.replace(
+        facility.current(), guards=True, abft=True, **over))
+
+
+def _flip_plan(**kw):
+    kw.setdefault("point", faults.CONTRACT_DISPATCH)
+    return faults.FaultPlan([faults.FaultSpec(kind=faults.FLIP, **kw)])
+
+
+# ---------------------------------------------------------------------
+# the regression the PR exists for
+# ---------------------------------------------------------------------
+
+def test_flip_on_pallas_gemm_detected_and_recovered_bitwise():
+    """An injected flip on a Pallas gemm dispatch is caught by checksum
+    verification and recovered — the caller receives the bitwise-correct
+    result and a recovered verdict is on the record."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y, plan=PALLAS))
+    with _abft_cfg(), faults.install(_flip_plan()):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y,
+                                           plan=PALLAS))
+        verdicts = abft.drain_verdicts()
+    assert out.tobytes() == base.tobytes()
+    assert len(verdicts) == 1
+    (v,) = verdicts
+    assert v["recovered"] and v["how"] == "retry"
+    assert v["op_class"] == "gemm"
+
+
+def test_flip_without_abft_sails_through_undetected():
+    """The gap ABFT closes: the identical flip under guards alone stays
+    finite, passes the NaN/Inf detector, and corrupts the result."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y, plan=PALLAS))
+    with facility.configure(dataclasses.replace(
+            facility.current(), guards=True)), \
+            faults.install(_flip_plan()):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y,
+                                           plan=PALLAS))
+        verdicts = abft.drain_verdicts()
+    assert bool(np.isfinite(out).all())          # invisible to the guard
+    assert out.tobytes() != base.tobytes()       # ...and wrong
+    assert verdicts == []
+    assert lowering.GUARD_EVENTS == []
+
+
+def test_abft_flag_without_guards_is_inert_and_bitwise():
+    """abft=True alone must change nothing: verification lives inside
+    guarded dispatch, and the unguarded tail stays bitwise-identical."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y, plan=PALLAS))
+    with facility.configure(dataclasses.replace(
+            facility.current(), abft=True)):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y,
+                                           plan=PALLAS))
+    assert out.tobytes() == base.tobytes()
+    assert abft.drain_verdicts() == []
+
+
+def test_persistent_flip_demotes_with_quarantine_exactly_once():
+    """A flip that survives the same-rung retry demotes down the ladder;
+    the clean lower rung commits quarantine once and later calls of the
+    same shape skip the poisoned rung entirely."""
+    x, y = _xy()
+    base = np.asarray(facility.contract("mk,kn->mn", x, y, plan=PALLAS))
+    plan = _flip_plan(every=1, max_fires=4)
+    with _abft_cfg(), faults.install(plan):
+        out = np.asarray(facility.contract("mk,kn->mn", x, y,
+                                           plan=PALLAS))
+        verdicts = abft.drain_verdicts()
+        q1 = dict(lowering.quarantine_state())
+        out2 = np.asarray(facility.contract("mk,kn->mn", x, y,
+                                            plan=PALLAS))
+        q2 = dict(lowering.quarantine_state())
+    assert out.tobytes() == base.tobytes()
+    assert out2.tobytes() == base.tobytes()
+    assert len(plan.fired(faults.CONTRACT_DISPATCH)) == 4
+    assert any(v["recovered"] and v["how"] == "demote" for v in verdicts)
+    assert list(q1.values()) == ["ref"]          # walked all the way down
+    assert q1 == q2                              # committed exactly once
+    reasons = {e["reason"] for e in lowering.GUARD_EVENTS}
+    assert "checksum-mismatch" in reasons
+
+
+# ---------------------------------------------------------------------
+# no false positives: clean dispatches stay bitwise and verdict-free
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+@pytest.mark.parametrize("m,k,n,batched", [
+    (16, 32, 16, False),
+    (13, 17, 11, False),       # fringe tiles exercise the masked sums
+    (8, 24, 12, True),         # batch rides the grid
+])
+def test_clean_gemm_sweep_no_false_positive(backend, m, k, n, batched):
+    x, y = _xy(m, k, n)
+    if batched:
+        x = jnp.stack([x, x + 1])
+        y = jnp.stack([y, y - 1])
+        spec = "bmk,bkn->bmn"
+    else:
+        spec = "mk,kn->mn"
+    plan = Plan(backend=backend)
+    base = np.asarray(facility.contract(spec, x, y, plan=plan))
+    with _abft_cfg():
+        out = np.asarray(facility.contract(spec, x, y, plan=plan))
+        verdicts = abft.drain_verdicts()
+    assert out.tobytes() == base.tobytes()
+    assert verdicts == []
+    assert lowering.GUARD_EVENTS == []
+
+
+def test_clean_forms_and_bias_epilogue_no_false_positive():
+    """The checksum identity is linear through alpha/beta/neg forms and
+    the bias epilogue — none of them may trip verification."""
+    x, y = _xy(16, 32, 16)
+    c = jax.random.normal(jax.random.key(3), (16, 16), jnp.float32)
+    bias = jax.random.normal(jax.random.key(4), (16,), jnp.float32)
+    calls = [
+        dict(plan=Plan(backend="pallas", alpha=1.5, beta=-0.5,
+                       neg_product=True), acc=c),
+        dict(plan=Plan(backend="pallas", neg_acc=True), acc=c),
+        dict(plan=PALLAS, bias=bias),
+    ]
+    for kw in calls:
+        base = np.asarray(facility.contract("mk,kn->mn", x, y, **kw))
+        with _abft_cfg():
+            out = np.asarray(facility.contract("mk,kn->mn", x, y, **kw))
+            verdicts = abft.drain_verdicts()
+        assert out.tobytes() == base.tobytes(), kw
+        assert verdicts == [], kw
+
+
+# ---------------------------------------------------------------------
+# attn / conv: operand augmentation (checksum column rides the operand)
+# ---------------------------------------------------------------------
+
+def _qkv(seed=0, B=2, Sq=8, Sk=8, H=2, D=16):
+    kq, kk, kv = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(kq, (B, Sq, H, D), jnp.float32),
+            jax.random.normal(kk, (B, Sk, H, D), jnp.float32),
+            jax.random.normal(kv, (B, Sk, H, D), jnp.float32))
+
+
+def test_attn_augmentation_is_tolerance_clean_and_detects_flip():
+    q, k, v = _qkv()
+    base = np.asarray(facility.contract(facility.ATTN, q, k, v))
+    # clean: augmentation (q pre-scaled for the D+1 depth, v checksum
+    # column) is tolerance-identical, not bitwise — and verdict-free
+    with _abft_cfg():
+        clean = np.asarray(facility.contract(facility.ATTN, q, k, v))
+        assert abft.drain_verdicts() == []
+    np.testing.assert_allclose(clean, base, atol=2e-2, rtol=2e-2)
+    # flipped: detected and recovered to a clean result
+    with _abft_cfg(), faults.install(_flip_plan()):
+        out = np.asarray(facility.contract(facility.ATTN, q, k, v))
+        verdicts = abft.drain_verdicts()
+    assert len(verdicts) == 1 and verdicts[0]["recovered"]
+    assert verdicts[0]["op_class"] == "attn"
+    np.testing.assert_allclose(out, base, atol=2e-2, rtol=2e-2)
+
+
+def test_conv_augmentation_detects_flip_and_depthwise_skips():
+    x = jax.random.normal(jax.random.key(0), (2, 24, 8), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (3, 8, 12), jnp.float32)
+    base = np.asarray(facility.contract(facility.CONV1D, x, w))
+    with _abft_cfg(), faults.install(_flip_plan()):
+        out = np.asarray(facility.contract(facility.CONV1D, x, w))
+        verdicts = abft.drain_verdicts()
+    assert len(verdicts) == 1 and verdicts[0]["recovered"]
+    assert verdicts[0]["op_class"] == "conv"
+    np.testing.assert_allclose(out, base, atol=1e-4, rtol=1e-4)
+    # depthwise convs have no summable output-channel axis: exempt, and
+    # therefore bitwise-identical with abft on
+    wd = jax.random.normal(jax.random.key(2), (3, 8), jnp.float32)
+    based = np.asarray(facility.contract(facility.CONV1D_DEPTHWISE, x, wd))
+    with _abft_cfg():
+        outd = np.asarray(
+            facility.contract(facility.CONV1D_DEPTHWISE, x, wd))
+        assert abft.drain_verdicts() == []
+    assert outd.tobytes() == based.tobytes()
+
+
+# ---------------------------------------------------------------------
+# prepacked operands: panel checksums, verified without demotion
+# ---------------------------------------------------------------------
+
+def test_packed_y_verifies_bitwise_and_detects_flip():
+    m, k, n = 16, 32, 16
+    x, y = _xy(m, k, n)
+    layout = packing.gemm_layout(Ger.F32GER, m, n, k, side="y",
+                                 backend="pallas")
+    po = packing.pack_gemm(y, layout)
+    plan = Plan(ger=Ger.F32GER, backend="pallas")
+    base = np.asarray(facility.contract("mk,kn->mn", x, po, plan=plan))
+    with _abft_cfg():
+        clean = np.asarray(facility.contract("mk,kn->mn", x, po,
+                                             plan=plan))
+        assert abft.drain_verdicts() == []
+    assert clean.tobytes() == base.tobytes()
+    with _abft_cfg(), faults.install(_flip_plan()):
+        out = np.asarray(facility.contract("mk,kn->mn", x, po, plan=plan))
+        verdicts = abft.drain_verdicts()
+    assert out.tobytes() == base.tobytes()
+    assert len(verdicts) == 1 and verdicts[0]["recovered"]
+
+
+# ---------------------------------------------------------------------
+# kernel sidecar: the checksum rows the gemm kernel folds into its store
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,batched", [(16, 32, 16, False),
+                                           (13, 40, 11, False),
+                                           (16, 32, 16, True)])
+def test_gemm_sidecar_matches_direct_sums(m, k, n, batched):
+    from repro.kernels import mma_gemm as G
+    x, y = _xy(m, k, n)
+    if batched:
+        x, y = jnp.stack([x, x * 2]), jnp.stack([y, y * 0.5])
+    out, ckc, ckr = G.mma_gemm(x, y, kind=Ger.F32GER, interpret=True,
+                               checksum=True)
+    # per-tile partial sums reduce to the true column/row sums of out
+    col = np.asarray(ckc).sum(axis=-2)
+    row = np.asarray(ckr).sum(axis=-1)
+    ref = np.asarray(out).astype(np.float64)
+    np.testing.assert_allclose(col, ref.sum(axis=-2), atol=1e-3,
+                               rtol=1e-5)
+    np.testing.assert_allclose(row, ref.sum(axis=-1), atol=1e-3,
+                               rtol=1e-5)

@@ -202,6 +202,32 @@ def test_overbroad_except():
     """)
 
 
+def test_fault_point_literal():
+    # a typo'd point never validates anywhere and silently never fires
+    assert "fault-point-literal" in rule_ids("""
+        from repro.runtime import faults as _faults
+        def f():
+            return _faults.fire("contract.dispatchh")
+    """)
+    assert "fault-point-literal" in rule_ids("""
+        from repro.runtime.faults import maybe_inject
+        def f():
+            return maybe_inject(point="autotune.lod")
+    """)
+    # a registered literal and a named constant are both fine
+    assert "fault-point-literal" not in rule_ids("""
+        from repro.runtime import faults as _faults
+        def f():
+            _faults.fire("autotune.load")
+            return _faults.fire(_faults.CONTRACT_DISPATCH)
+    """)
+    # unrelated fire() functions are not the registry's hook
+    assert "fault-point-literal" not in rule_ids("""
+        def f(event):
+            return event.fire("whatever")
+    """)
+
+
 def test_suppression_honored():
     flagged = """
         def f(x, y):
@@ -230,7 +256,7 @@ def test_every_ast_rule_has_catalog_entry():
     ast_rules = {"facility-purity", "lax-purity", "grid-owns-batch",
                  "attn-op-class", "pack-once", "layer-stratification",
                  "deprecated-shim", "mutable-default-arg",
-                 "overbroad-except"}
+                 "overbroad-except", "fault-point-literal"}
     for rid in ast_rules:
         assert rid in rules.RULES, rid
         assert rules.RULES[rid].contract_pr.startswith("PR")

@@ -217,10 +217,45 @@ def test_load_fault_degrades_like_corruption(tmp_path):
     path = tmp_path / "at.json"
     cache = autotune.AutotuneCache(path)
     key = _store_one(cache)
+    # persistently unreadable store: every retry attempt fails too
     plan = faults.FaultPlan([faults.FaultSpec(
-        point=faults.AUTOTUNE_LOAD, kind=faults.RAISE)])
+        point=faults.AUTOTUNE_LOAD, kind=faults.RAISE,
+        every=1, max_fires=None)])
     victim = autotune.AutotuneCache(path)         # fresh (lazy) reader
     with faults.install(plan):
         assert victim.get(key) is None            # load failed -> empty
+    # the bounded retry gave the store every chance before degrading
+    assert len(plan.fired(faults.AUTOTUNE_LOAD)) == \
+        autotune.AutotuneCache.LOAD_RETRIES
     # the file itself is fine: an untainted reader still sees the winner
     assert autotune.AutotuneCache(path).get(key) is not None
+
+
+def test_load_transient_fault_is_retried_and_heals(tmp_path):
+    from repro.runtime import faults
+
+    path = tmp_path / "at.json"
+    cache = autotune.AutotuneCache(path)
+    key = _store_one(cache)
+    # a one-off IO hiccup (max_fires=1): the retry must clear it and the
+    # reader must come up with the full store, not the heuristic
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.AUTOTUNE_LOAD, kind=faults.RAISE, max_fires=1)])
+    victim = autotune.AutotuneCache(path)
+    with faults.install(plan):
+        assert victim.get(key) == tiling.BlockConfig(64, 128, 128)
+    assert len(plan.fired(faults.AUTOTUNE_LOAD)) == 1
+
+
+def test_load_corrupt_json_is_not_retried(tmp_path, monkeypatch):
+    # ValueError (garbage JSON) is deterministic, not transient: the
+    # loader must degrade immediately instead of sleeping through
+    # pointless retries
+    path = tmp_path / "at.json"
+    path.write_bytes(b"{\"version\": 3, \"entri")
+    sleeps = []
+    monkeypatch.setattr(autotune.time, "sleep",
+                        lambda s: sleeps.append(s))
+    cache = autotune.AutotuneCache(path)
+    assert len(cache) == 0
+    assert sleeps == []

@@ -137,3 +137,40 @@ def test_events_record_point_kind_step():
     assert (ev.point, ev.kind, ev.step) == (faults.TRAIN_STEP,
                                             faults.RAISE, 3)
     assert np.isfinite(ev.latency_s)
+
+
+def test_flip_fires_once_with_seed_and_stays_finite():
+    import jax.numpy as jnp
+    p = _plan(faults.FaultSpec(point=faults.CONTRACT_DISPATCH,
+                               kind=faults.FLIP))
+    f = p.fire(faults.CONTRACT_DISPATCH)
+    assert f is not None and f.kind == faults.FLIP
+    assert f.seed is not None                     # drawn from the plan RNG
+    assert p.fire(faults.CONTRACT_DISPATCH) is None   # an event, not a state
+    x = jnp.linspace(-1.0, 1.0, 24, dtype=jnp.float32).reshape(4, 6)
+    y = faults.flip(x, f.seed)
+    assert bool(jnp.isfinite(y).all())            # SDC is finite-but-wrong
+    diff = np.asarray(jnp.abs(y - x) > 0)
+    assert diff.sum() == 1                        # exactly one element hit
+
+
+def test_flip_is_seeded_reproducible():
+    import jax.numpy as jnp
+    x = jnp.ones((3, 5), jnp.bfloat16)
+    a, b = faults.flip(x, 1234), faults.flip(x, 1234)
+    assert bool((a == b).all())                   # same seed, same element
+    c = faults.flip(x, 1235)
+    assert not bool((a == c).all())               # different seed moves it
+    # two independently-built plans draw the same per-fire seeds
+    mk = lambda: _plan(faults.FaultSpec(point=faults.CONTRACT_DISPATCH,
+                                        kind=faults.FLIP), seed=7)
+    assert mk().fire(faults.CONTRACT_DISPATCH).seed == \
+        mk().fire(faults.CONTRACT_DISPATCH).seed
+
+
+def test_flip_passes_non_inexact_and_empty():
+    import jax.numpy as jnp
+    i = jnp.ones((4,), jnp.int32)
+    assert faults.flip(i, 0) is i
+    e = jnp.zeros((0, 3), jnp.float32)
+    assert faults.flip(e, 0) is e

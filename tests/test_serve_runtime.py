@@ -181,3 +181,31 @@ def test_fault_matrix_every_request_served_exactly_once(served_model):
     assert by_name["alloc-fault"]["requeues"] >= 1
     assert (by_name["page-exhaustion"]["pages"]["high_water_pages"]
             <= by_name["page-exhaustion"]["pages"]["total_pages"])
+    # sdc: the flipped gemm was caught by checksum verification (not by
+    # the finite guard — the corruption is finite-but-wrong) and every
+    # request still completed exactly once
+    assert by_name["sdc"]["fired"] >= 1
+    assert by_name["sdc"]["abft_detections"] >= 1
+    assert by_name["sdc"]["completed"] == 3
+
+
+def test_serve_unrecovered_sdc_discards_tick_and_requeues(served_model):
+    """A flip burst long enough to outlive retry+demotion inside one
+    dispatch becomes an unrecovered verdict: the tick's tokens are
+    discarded, every active slot is preempted with its pages reclaimed
+    exactly once, and the requests finish on readmission."""
+    cfg, params = served_model
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CONTRACT_DISPATCH, kind=faults.FLIP,
+        every=1, max_fires=8)])
+    with faults.install(plan):
+        out = serve.serve_loop(cfg, params, batch=2, prompt_len=4,
+                               gen_len=5, n_requests=2, guards=True,
+                               abft=True, max_retries=4)
+    assert out["abft_detections"] >= 1
+    assert out["abft_discards"] >= 1
+    assert out["requeues"] >= 1 or out["preemptions"] >= 1
+    assert out["completed"] + out["failed"] == 2
+    # the page ledger balanced through every preempt/readmit cycle
+    assert out["pages"]["allocs"] == out["pages"]["frees"]
+    assert out["pages"]["free_pages"] == out["pages"]["total_pages"]

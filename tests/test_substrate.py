@@ -270,6 +270,31 @@ def test_checkpoint_save_faults_never_corrupt_latest(tmp_path):
     assert ckpt.latest_step() == 16
 
 
+def test_checkpoint_torn_write_survives_process_restart(tmp_path):
+    """The crash-restart story end to end: a torn save followed by a
+    *fresh* Checkpointer (new process, no in-memory state) must come up
+    on the previous complete step, restore it bit-exactly, and accept
+    the next save."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32),
+            "b": {"m": jnp.ones((2, 2), jnp.bfloat16)}}
+    writer = Checkpointer(str(tmp_path))
+    writer.save(4, tree)
+    plan = faults.FaultPlan([faults.FaultSpec(
+        point=faults.CHECKPOINT_SAVE, kind=faults.TORN, at_steps=(8,))])
+    with faults.install(plan):
+        writer.save(8, tree)                 # torn mid-write, no raise
+    assert plan.fired(faults.CHECKPOINT_SAVE)
+    del writer                               # "process" dies here
+
+    restarted = Checkpointer(str(tmp_path))  # fresh reader of the dir
+    assert restarted.latest_step() == 4      # torn step 8 is invisible
+    got = restarted.restore(4, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    restarted.save(12, tree)                 # and the run moves on
+    assert restarted.latest_step() == 12
+
+
 def test_elastic_trainers_do_not_share_config():
     """Regression: the old `cfg: ElasticConfig = ElasticConfig()` default
     was evaluated once and aliased across every trainer."""
