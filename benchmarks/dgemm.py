@@ -22,6 +22,13 @@ The packed rows (``pgemm_N<n>``) track the prepacked-layout subsystem
 panel stream (``y_layout=``, zero per-call relayout) versus natural
 layout, both through the interpreted Pallas kernel — wall clock of both
 plus a bitwise-equality bit (the packed fringe contract).
+
+The sharded rows (``sgemm_N<n>``) track the mesh-native contract path
+(DESIGN.md section 11): the same facility GEMM dispatched single-device
+versus sharded M-over-data / N-over-model on a forced 8-way host mesh
+(subprocess — the parent's jax is already initialized single-device),
+with the bitwise-equality bit, the collective fault-point count proving
+the shard_map engaged, and per-shard vs global roofline projections.
 """
 
 import functools
@@ -111,6 +118,45 @@ def run():
              f"bitwise_equal={bitwise};"
              f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")
 
+    # ---- sharded sweep: mesh-native contract vs single-device ----
+    # The sharded path wants real (forced-host) devices and the parent
+    # process's jax is long since initialized single-device, so the probe
+    # runs in a subprocess with an 8-way forced host platform and reports
+    # one JSON line per shape.  Wall clock on interpreted-Pallas CPU
+    # shards is diagnostic only; the row's contract is the bitwise bit
+    # plus the per-shard roofline projection (each shard solves the
+    # m/dp x n/tp slab with the full K resident).
+    import json as _json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_PROBE], capture_output=True,
+        text=True, env=env, timeout=300)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded gemm probe failed:\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("SGEMM "):
+            continue
+        rec = _json.loads(line[len("SGEMM "):])
+        m, n, k = rec["m"], rec["n"], rec["k"]
+        dp, tp = rec["dp"], rec["tp"]
+        cfg = tiling.choose_blocks(m, n, k, kind)
+        util_global = gemm_projected_util(m, n, k, cfg, pol)
+        util_shard = gemm_projected_util(m // dp, n // tp, k, cfg, pol)
+        emit(f"sgemm_N{n}", rec["us_sharded"],
+             f"us_single={rec['us_single']:.1f};"
+             f"us_sharded={rec['us_sharded']:.1f};"
+             f"bitwise_equal={rec['bitwise_equal']};"
+             f"collective_fired={rec['collective_fired']};"
+             f"mesh={dp}x{tp};"
+             f"v5e_util_global={util_global:.3f};"
+             f"v5e_util_per_shard={util_shard:.3f}")
+
     # ---- abft sweep: checksum-verified dispatch vs plain dispatch ----
     # Both arms run the *eager* facility dispatch (verification needs
     # concrete operands, so there is no jitted abft path to compare
@@ -145,3 +191,57 @@ def run():
              f"us_abft_off={us_off:.1f};"
              f"overhead_pct={overhead:.1f};"
              f"bitwise_equal={bitwise}")
+
+
+# The subprocess body for the sharded sweep.  It re-runs the same
+# facility.contract under (a) plain single-device dispatch and (b) the
+# ambient 2x4 (data, model) mesh rules, where the pallas gemm lowering
+# shards M over data and N over model under one shard_map
+# (DESIGN.md section 11).  The collective fault probe proves the sharded
+# path engaged — a silently-degraded dispatch would time the single-device
+# kernel twice and trivially match bitwise.
+_SHARDED_PROBE = r'''
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from benchmarks.common import time_fn
+from repro.core import facility
+from repro.core.lowering import Plan
+from repro.parallel import api as par
+from repro.runtime import faults
+
+rng = np.random.default_rng(0)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+rules = par.default_rules(mesh)
+plan = Plan(backend="pallas")
+
+for n in (128, 256):
+    m, k = n, 128
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+
+    def single(a, c):
+        return facility.contract("mk,kn->mn", a, c, plan=plan)
+
+    def sharded(a, c):
+        with par.use_rules(rules):
+            return facility.contract("mk,kn->mn", a, c, plan=plan)
+
+    us_single = time_fn(jax.jit(single), x, y)
+    us_sharded = time_fn(jax.jit(sharded), x, y)
+    probe = faults.FaultPlan([faults.FaultSpec(
+        faults.COLLECTIVE, kind=faults.LATENCY, latency_s=0.0,
+        every=1, max_fires=None)])
+    with faults.install(probe):
+        got = sharded(x, y)
+    bitwise = int(bool((np.asarray(single(x, y)) == np.asarray(got)).all()))
+    print("SGEMM " + json.dumps({
+        "m": m, "n": n, "k": k, "dp": 2, "tp": 4,
+        "us_single": us_single, "us_sharded": us_sharded,
+        "bitwise_equal": bitwise,
+        "collective_fired": len(probe.fired(faults.COLLECTIVE))}))
+'''

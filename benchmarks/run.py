@@ -28,14 +28,15 @@ import json
 import sys
 
 BENCH_NAMES = ("dgemm", "hpl_like", "sconv", "dft", "attention",
-               "power_proxy", "ger_kinds", "step_bench", "serving")
+               "power_proxy", "ger_kinds", "step_bench", "serving",
+               "moe_dispatch")
 
 
 def _load_benchmarks():
     """Import the benchmark modules *before* any CSV output so an import
     error exits nonzero without emitting a partial header."""
     from benchmarks import attention, dft, dgemm, ger_kinds, hpl_like, \
-        power_proxy, sconv, serving, step_bench
+        moe_dispatch, power_proxy, sconv, serving, step_bench
     return {
         "dgemm": dgemm.run,
         "hpl_like": hpl_like.run,
@@ -46,6 +47,7 @@ def _load_benchmarks():
         "ger_kinds": ger_kinds.run,
         "step_bench": step_bench.run,
         "serving": serving.run,
+        "moe_dispatch": moe_dispatch.run,
     }
 
 

@@ -32,11 +32,23 @@ def main():
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--lr", type=float, default=6e-4)
     ap.add_argument("--ckpt", default="/tmp/mamba130m_ckpt")
+    ap.add_argument("--progress-every", type=int, default=10,
+                    help="live-progress line every N steps (0 = silent)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run under a (data, model) mesh, e.g. 2x2 "
+                         "(wants XLA_FLAGS to force enough host devices)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the arch (configs.base.reduced) — the CI "
+                         "smoke budget; the full 130M run is the default")
     args = ap.parse_args()
 
     cfg = get("mamba2-130m")
+    if args.reduced:
+        from repro.configs.base import reduced
+        cfg = reduced(cfg)
     n_params = cfg.param_count()
-    print(f"mamba2-130m: {n_params / 1e6:.0f}M params, "
+    print(f"mamba2-130m{' (reduced)' if args.reduced else ''}: "
+          f"{n_params / 1e6:.0f}M params, "
           f"{args.steps} steps x {args.batch}x{args.seq} tokens")
 
     opt_cfg = adamw.AdamWConfig(
@@ -56,12 +68,29 @@ def main():
                 s += 1
         return gen()
 
+    def live(s, loss, dt):
+        if args.progress_every and (s + 1) % args.progress_every == 0:
+            print(f"  [train] step {s + 1:4d}/{args.steps}  "
+                  f"loss {loss:.3f}  {dt * 1e3:6.0f} ms/step", flush=True)
+
     trainer = ElasticTrainer(
         make_step=lambda: step, make_state=make_state, batches=batches,
         checkpointer=Checkpointer(args.ckpt, keep=2),
-        cfg=ElasticConfig(ckpt_every=50))
+        cfg=ElasticConfig(ckpt_every=50), on_step=live)
+
     t0 = time.time()
-    out = trainer.run(args.steps)
+    if args.mesh:
+        # Mesh-native run: the ambient rules put every contract the model
+        # issues onto the sharded lowering path (DESIGN.md section 11).
+        from repro.launch.mesh import make_test_mesh
+        from repro.parallel import api as par
+        shape = tuple(int(v) for v in args.mesh.split("x"))
+        mesh = make_test_mesh(shape, ("data", "model"))
+        print(f"mesh: {args.mesh} ({mesh.devices.size} devices)")
+        with par.use_rules(par.default_rules(mesh)), mesh:
+            out = trainer.run(args.steps)
+    else:
+        out = trainer.run(args.steps)
     dt = time.time() - t0
     losses = [m["loss"] for m in out["metrics"]]
     tok_s = len(losses) * args.batch * args.seq / dt

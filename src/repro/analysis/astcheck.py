@@ -95,6 +95,8 @@ class Checker(ast.NodeVisitor):
         self.attn_client = (
             self.module == rules.ATTN_FORBIDDEN_PREFIX
             or self.module.startswith(rules.ATTN_FORBIDDEN_PREFIX + "."))
+        self.collective_sanctioned = (
+            self.module in rules.COLLECTIVE_SANCTIONED)
         self.stratum = rules.stratum_of(self.module)
 
     # -- plumbing ------------------------------------------------------
@@ -164,6 +166,12 @@ class Checker(ast.NodeVisitor):
                 self.report("deprecated-shim", node,
                             f"import of deprecated shim `{target}` — "
                             "call facility.contract instead")
+            if (target in rules.COLLECTIVE_FNS
+                    and not self.collective_sanctioned):
+                self.report("collective-purity", node,
+                            f"import of raw collective `{target}` — the "
+                            "mesh-native dispatch surface (parallel/api, "
+                            "core/lowering, runtime/pipeline) owns it")
             # The per-name candidate prefix-subsumes the module itself,
             # so `from repro.kernels import epilogue` is checked once as
             # `repro.kernels.epilogue`, not again as `repro.kernels`.
@@ -231,6 +239,11 @@ class Checker(ast.NodeVisitor):
                             "facility.contract instead")
         if mod == rules.FAULT_MODULE and fn in rules.FAULT_HOOKS:
             self._check_fault_point(node, fn)
+        if q in rules.COLLECTIVE_FNS and not self.collective_sanctioned:
+            self.report("collective-purity", node,
+                        f"raw collective `{q}(...)` outside the "
+                        "mesh-native dispatch surface — annotate with "
+                        "parallel.api.shard or bind the contract's mesh")
         self._check_pack_once(node, fn)
 
     def _check_fault_point(self, node: ast.Call, fn: str) -> None:

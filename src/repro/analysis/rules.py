@@ -87,6 +87,13 @@ RULES: dict[str, Rule] = {r.id: r for r in [
          "name registered injection points (members of faults.POINTS) — "
          "a typo'd point validates nowhere and silently never fires",
          "PR 9"),
+    Rule("collective-purity",
+         "raw collectives (shard_map, with_sharding_constraint, "
+         "lax.ppermute, lax.all_to_all) are the mesh-native dispatch "
+         "surface's own vocabulary — parallel/api, core/lowering, and "
+         "runtime/pipeline only; models annotate with parallel.api.shard "
+         "and contracts shard through facility.contract's mesh binding",
+         "PR 10"),
     Rule("overbroad-except",
          "no bare `except:` / `except Exception:` / `except "
          "BaseException:` — failure handling catches the narrow "
@@ -182,6 +189,22 @@ DEPRECATED_SHIMS: dict[str, frozenset] = {
                                     "mma_conv2d", "mma_pm_dot"}),
     "repro.kernels.mma_attention": frozenset({"flash_attention"}),
 }
+
+# collective-purity: the raw collective spellings (resolved through the
+# alias table, so `from jax.experimental.shard_map import shard_map` and
+# `lax.ppermute` both match) and the three modules that ARE the
+# mesh-native dispatch surface.
+COLLECTIVE_FNS = frozenset({
+    "jax.experimental.shard_map.shard_map",
+    "jax.lax.with_sharding_constraint",
+    "jax.lax.ppermute",
+    "jax.lax.all_to_all",
+})
+COLLECTIVE_SANCTIONED = frozenset({
+    "repro.parallel.api",
+    "repro.core.lowering",
+    "repro.runtime.pipeline",
+})
 
 # mutable-default-arg: call-expression defaults that are immutable and
 # therefore safe to evaluate once at def time.

@@ -66,6 +66,8 @@ import warnings
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _P
 
 from repro.core import abft as _abft
 from repro.core import precision
@@ -124,6 +126,12 @@ class Plan:
     window: int | None = None         # sliding window: q_pos - k_pos < window
     q_offset: int = 0                 # absolute position of q[0] (decode)
     q_chunk: int = 0                  # xla lowering's q-chunk (0 = default)
+    # Mesh binding for the shard-aware dispatch (DESIGN.md section 11):
+    # None -> the ambient parallel.api rules (model code stays
+    # annotation-only); False -> single-device lowering even under an
+    # active mesh (e.g. contracts issued *inside* a shard_map body); a
+    # jax.sharding.Mesh or parallel.api.ShardingRules binds explicitly.
+    mesh: object = None
 
 
 # ----------------------------------------------------------------------
@@ -1553,7 +1561,7 @@ def _apply_data_fault(fault, out):
 
 
 def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
-                      fused: bool, abft_on: bool = False):
+                      fused: bool, abft_on: bool = False, wrap=None):
     """Walk the ladder from ``backend`` (or its quarantined demotion)
     until a rung returns a clean output.
 
@@ -1597,14 +1605,15 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
         ``raw`` the array verification checks (augmented checksum channel
         intact), ``cap`` the Pallas kernel-sidecar capture."""
         fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
+        runner = wrap(fn) if wrap is not None else fn
         cap = None
         if aplan is not None and aplan.augments:
-            raw = fn(aplan.augment(sub))
+            raw = runner(aplan.augment(sub))
         elif aplan is not None:
             with _abft.capture() as cap:
-                raw = fn(sub)
+                raw = runner(sub)
         else:
-            raw = fn(sub)
+            raw = runner(sub)
         raw = _apply_data_fault(fault, raw)
         out = aplan.strip(raw) if aplan is not None and aplan.augments \
             else raw
@@ -1687,6 +1696,275 @@ def _guarded_dispatch(op: "Op", op_class: str, backend: str, ger: Ger,
         DISPATCH_COUNTS[(rung, op_class, ger.value)] += 1
         return out
     raise last_exc  # pragma: no cover — loop always returns or raises
+
+
+# ----------------------------------------------------------------------
+# Shard-aware dispatch: the mesh-native lowering path (DESIGN.md
+# section 11).  When a mesh binding resolves (Plan.mesh or the ambient
+# parallel.api rules), the pallas gemm/conv/attn lowerings run PER SHARD
+# under one shard_map: output-disjoint labels (batch, M, N, heads, Sq)
+# map onto mesh axes, every shard keeps the FULL contraction extent, and
+# the block plan is resolved once at the global shape so each shard runs
+# exactly the k-loop the single-device dispatch would — sharded output is
+# bitwise-identical to single-device output (tests/test_sharding.py).
+# The guarded ladder and ABFT wrap the shard_map from outside: demotion
+# and checksum verdicts stay whole-dispatch decisions, with kernel-
+# sidecar capture masked inside the trace (abft.suppress) so the passive
+# global checksums carry verification.
+# ----------------------------------------------------------------------
+
+_SHARD_OPERANDS = ("x", "y", "z", "acc", "bias", "residual", "valid")
+
+
+def _shard_rules(plan: Plan):
+    """Resolve ``Plan.mesh`` to the active ShardingRules, or None when
+    this dispatch stays single-device (no binding, ``mesh=False``, or a
+    rules object with no mesh behind it)."""
+    from repro.parallel import api as _par
+    b = plan.mesh
+    if b is False:
+        return None
+    if b is None:
+        r = _par.current()
+        return r if (r.enabled and r.mesh is not None) else None
+    if isinstance(b, _par.ShardingRules):
+        return b if b.mesh is not None else None
+    return _par.default_rules(b)
+
+
+def _ax_flat(ax) -> tuple:
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShardPlan:
+    """How one dispatch maps onto the mesh: per-operand PartitionSpecs in
+    ``_SHARD_OPERANDS`` order, the output spec, the globally-resolved
+    block override, and — for causal/window sequence-parallel attn — the
+    mesh axes whose flattened index selects the static per-shard
+    ``q_offset`` branch."""
+
+    mesh: object
+    in_specs: tuple
+    out_spec: object
+    block: tuple | None = None
+    seq_axes: tuple = ()
+    seq_parts: int = 1
+    seq_local: int = 0
+
+
+def _plan_gemm_shards(op: Op, rules) -> _ShardPlan | None:
+    """Bind gemm labels to mesh axes: batch labels ride the data axes
+    (any packed operand vetoes — batch labels live inside the tile
+    stream), M rows take the data axes otherwise, N columns take the TP
+    axis when the y side is natural.  Contraction labels are never
+    sharded: every shard reduces the full K, which is what makes the
+    sharded output bitwise-equal to the single-device one."""
+    p = op.parsed
+    sizes = _sizes(p, op.x, op.y)
+    x_packed = _packing.is_packed(op.x)
+    y_packed = _packing.is_packed(op.y)
+    dp = rules.rules.get("batch")
+    tp = rules.rules.get("mlp") or rules.rules.get("heads")
+    assign: dict = {}
+    used: list = []
+
+    def bind(labels, ax, veto) -> bool:
+        if ax is None or veto or not labels:
+            return False
+        e = rules.axis_extent(ax)
+        if e <= 1 or any(a in used for a in _ax_flat(ax)):
+            return False
+        for d in labels:
+            if sizes[d] % e == 0:
+                assign[d] = ax
+                used.extend(_ax_flat(ax))
+                return True
+        return False
+
+    if not bind(p.batch, dp, x_packed or y_packed):
+        bind(p.x_free, dp, x_packed)
+    # bias is flat over the normalized N: its contiguous shard chunks
+    # line up with output columns only when the OUTERMOST y_free label
+    # is the sharded one.
+    n_labels = p.y_free[:1] if op.bias is not None else p.y_free
+    bind(n_labels, tp, y_packed)
+    if not assign:
+        return None
+
+    if x_packed or y_packed or op.block is not None:
+        # A pack's layout block (or the caller's explicit block) already
+        # drives every shard identically.
+        blk = op.block
+    else:
+        # Resolve at the GLOBAL shape: bitwise equality needs every
+        # shard to run the single-device k-loop; bm/bn only group
+        # independent output tiles (masked fringe absorbs bm > m_local).
+        b, m, n, k = (_prod(sizes[d] for d in p.batch),
+                      _prod(sizes[d] for d in p.x_free),
+                      _prod(sizes[d] for d in p.y_free),
+                      _prod(sizes[d] for d in p.contract))
+        pack = 2 if op.pol.packed_int4 else 1
+        blk = resolve_block(op.ger, m, n, k * pack, None,
+                            op.epilogue.key, b=b if p.batch else 1)
+        if blk is None:
+            from repro.core import tiling as _tiling
+            tcfg = _tiling.choose_blocks(m, n, k * pack, rep_kind(op.ger))
+            blk = (tcfg.bm, tcfg.bn, tcfg.bk)
+
+    def spec_for(labels, arr):
+        if arr is None or _packing.is_packed(arr):
+            return _P()
+        return _P(*[assign.get(d) for d in labels])
+
+    out_spec = _P(*[assign.get(d) for d in p.out_labels])
+    bias_spec = _P(assign.get(p.y_free[0])) if op.bias is not None \
+        else _P()
+    return _ShardPlan(
+        mesh=rules.mesh,
+        in_specs=(spec_for(p.x_labels, op.x), spec_for(p.y_labels, op.y),
+                  _P(), spec_for(p.out_labels, op.acc), bias_spec,
+                  spec_for(p.out_labels, op.residual), _P()),
+        out_spec=out_spec, block=blk)
+
+
+def _plan_conv_shards(op: Op, rules) -> _ShardPlan | None:
+    """Conv shards the image batch N over the data axes; filters and bias
+    stay resident (replicated).  The filter-block resolution is
+    N-independent, so per-shard lowering re-derives the global plan."""
+    dp = rules.rules.get("batch")
+    e = rules.axis_extent(dp)
+    n = op.x.shape[0]
+    if e <= 1 or n % e:
+        return None
+    img = _P(dp, *([None] * (op.x.ndim - 1)))
+    rep = _P()
+    return _ShardPlan(
+        mesh=rules.mesh,
+        in_specs=(img, rep, rep, rep, rep,
+                  img if op.residual is not None else rep, rep),
+        out_spec=img)
+
+
+def _plan_attn_shards(op: Op, rules) -> _ShardPlan | None:
+    """Attn shards B over the data axes and heads over TP — but only when
+    BOTH q heads and kv heads divide (each shard keeps the full GQA
+    group ratio, so the kernel's head-group-broadcast index maps are
+    untouched); otherwise Sq goes sequence-parallel over the seq rules
+    entry, with K/V resident.  Causal/window sequence shards record the
+    mesh axes so dispatch can select each shard's static q_offset."""
+    b, sq, h, d = op.x.shape
+    kvh = op.y.shape[2]
+    sk = op.y.shape[1]
+    dp = rules.rules.get("batch")
+    hp = rules.rules.get("heads")
+    sqp = rules.rules.get("seq")
+    q = [None, None, None, None]
+    kv = [None, None, None, None]
+    used: list = []
+    seq_axes: tuple = ()
+    seq_parts, seq_local = 1, 0
+
+    def free(ax) -> bool:
+        return (ax is not None and rules.axis_extent(ax) > 1
+                and not any(a in used for a in _ax_flat(ax)))
+
+    if free(dp) and b % rules.axis_extent(dp) == 0:
+        q[0] = kv[0] = dp
+        used.extend(_ax_flat(dp))
+    if free(hp) and h % rules.axis_extent(hp) == 0 \
+            and kvh % rules.axis_extent(hp) == 0:
+        q[2] = hp
+        kv[2] = hp
+        used.extend(_ax_flat(hp))
+    elif free(sqp) and sq % rules.axis_extent(sqp) == 0:
+        e = rules.axis_extent(sqp)
+        q[1] = sqp
+        used.extend(_ax_flat(sqp))
+        if op.causal or op.window is not None:
+            seq_axes, seq_parts, seq_local = _ax_flat(sqp), e, sq // e
+    if all(a is None for a in q):
+        return None
+
+    # The global (bq, bk) plan; a sequence shard takes the largest
+    # divisor of its local Sq not above the global bq (the kernel wants
+    # dividing query blocks; bk is untouched — it shapes the KV stream
+    # every shard walks identically).
+    bq, bk = _attn_blocks(op, b * h, sq, sk, d)
+    if q[1] is not None:
+        loc = sq // rules.axis_extent(sqp)
+        while loc % bq:
+            bq -= 1
+    valid_spec = _P()
+    if (op.valid is not None and q[0] is not None
+            and getattr(op.valid, "ndim", 0) == 2
+            and op.valid.shape[0] == b):
+        valid_spec = _P(dp, None)
+    return _ShardPlan(
+        mesh=rules.mesh,
+        in_specs=(_P(*q), _P(*kv), _P(*kv), _P(), _P(),
+                  _P(*q) if op.residual is not None else _P(), valid_spec),
+        out_spec=_P(*q), block=(bq, bk),
+        seq_axes=seq_axes, seq_parts=seq_parts, seq_local=seq_local)
+
+
+def _shard_plan(op: Op, op_class: str, rules) -> _ShardPlan | None:
+    if op_class == "gemm":
+        return _plan_gemm_shards(op, rules)
+    if op_class == "conv":
+        return _plan_conv_shards(op, rules)
+    if op_class == "attn":
+        return _plan_attn_shards(op, rules)
+    return None
+
+
+def _shard_wrap(sp: _ShardPlan):
+    """``fn -> per-shard fn``: the one shard_map of the mesh-native path.
+
+    The body replaces the Op's array operands with their local shards and
+    pins the globally-resolved block.  ABFT kernel-sidecar capture is
+    masked inside the trace (abft.suppress — deposits of shard_map
+    tracers must not escape it); verification falls back to the passive
+    global checksums.  Causal/window sequence-parallel attn selects its
+    static per-shard ``q_offset`` with a lax.switch over the flattened
+    mesh-axis index: ``seq_parts`` statically-specialized branches, each
+    with exactly its shard's causal grid bounds."""
+
+    def wrap(fn):
+        def run(sub: "Op"):
+            _faults.maybe_inject(_faults.COLLECTIVE)
+            keys, vals, specs = [], [], []
+            for name, spec in zip(_SHARD_OPERANDS, sp.in_specs):
+                v = getattr(sub, name)
+                if v is None:
+                    continue
+                keys.append(name)
+                vals.append(v)
+                specs.append(spec)
+            blk = sp.block if sp.block is not None else sub.block
+
+            def body(*args):
+                inner = dataclasses.replace(
+                    sub, block=blk, **dict(zip(keys, args)))
+                with _abft.suppress():
+                    if sp.seq_parts > 1:
+                        idx = lax.axis_index(sp.seq_axes[0])
+                        for a in sp.seq_axes[1:]:
+                            idx = idx * sp.mesh.shape[a] + lax.axis_index(a)
+                        branches = [
+                            functools.partial(
+                                lambda o: fn(dataclasses.replace(
+                                    inner, q_offset=o)),
+                                sub.q_offset + i * sp.seq_local)
+                            for i in range(sp.seq_parts)]
+                        return lax.switch(idx, branches)
+                    return fn(inner)
+
+            return _shard_map(
+                body, mesh=sp.mesh, in_specs=tuple(specs),
+                out_specs=sp.out_spec, check_rep=False)(*vals)
+        return run
+    return wrap
 
 
 # ----------------------------------------------------------------------
@@ -1975,17 +2253,25 @@ def execute(spec: str, x, y, z=None, *, cfg, plan: Plan | None = None,
             stride=stride, padding=plan.padding, masks=masks,
             z=z, valid=valid, causal=plan.causal, window=plan.window,
             q_offset=plan.q_offset, q_chunk=plan.q_chunk)
+    wrap = None
+    if backend == "pallas" and op_class in ("gemm", "conv", "attn"):
+        srules = _shard_rules(plan)
+        if srules is not None:
+            sp = _shard_plan(op, op_class, srules)
+            if sp is not None:
+                wrap = _shard_wrap(sp)
     if getattr(cfg, "guards", False):
         out = _guarded_dispatch(op, op_class, backend, ger,
                                 not ep.is_identity,
-                                abft_on=getattr(cfg, "abft", False))
+                                abft_on=getattr(cfg, "abft", False),
+                                wrap=wrap)
     else:
         # The unguarded fast path: with no fault plan installed this is
         # ONE contextvar read away from `fn(op)` — bitwise-identical
         # output (tests/test_guards.py::test_guards_off_bitwise_unchanged).
         DISPATCH_COUNTS[(backend, op_class, ger.value)] += 1
         fault = _faults.maybe_inject(_faults.CONTRACT_DISPATCH)
-        out = fn(op)
+        out = wrap(fn)(op) if wrap is not None else fn(op)
         out = _apply_data_fault(fault, out)
     if dequant is not None:
         out = dequant.apply(out)

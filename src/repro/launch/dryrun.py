@@ -142,6 +142,16 @@ def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     rules = par.default_rules(mesh)
     import dataclasses
+    dp_extent = rules.axis_extent(rules.rules.get("batch"))
+    if SP.SHAPES[shape]["batch"] < dp_extent:
+        # A global batch smaller than the data axes can't use them, and
+        # the degraded replicated-batch + sharded-cache layout aborts
+        # XLA:CPU's SPMD partitioner outright (free(): invalid pointer in
+        # backend_compile on the long_500k single-stream decode).  The
+        # pure-dp small-model layout is the honest mapping for these
+        # cells and compiles cleanly.
+        pure_dp = True
+        rec["opts"]["pure_dp"] = True
     if pure_dp:
         # Small-model mode: batch over EVERY mesh axis, no tensor
         # parallelism, replicated params (130M-class fits every chip).

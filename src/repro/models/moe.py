@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core import facility
 from repro.core.facility import DOT, Epilogue, Plan
 from repro.models import layers
+from repro.parallel import api as par
 from repro.parallel.api import shard
 
 # Dispatch lowering.  False = the naive scatter-based dispatch/combine
@@ -31,6 +32,16 @@ from repro.parallel.api import shard
 # replicating the update tensor (observed: 9.9 TB/chip of all-reduce for
 # deepseek-moe-16b train_4k); gathers partition cleanly.
 GATHER_DISPATCH = False
+
+# Expert-GEMM placement.  False = annotation-only: the dispatch buffer is
+# pinned to the expert axis with shard() and XLA SPMD infers the
+# collectives.  True = the explicit exchange: the capacity buffer goes
+# through parallel.api.expert_exchange — ONE all_to_all out to the
+# expert-parallel shards (each runs its resident experts' FFN on every
+# peer's slots) and one back — the comm pattern a multi-pod EP deployment
+# schedules by hand.  The exchange is a pure slot permutation, so either
+# setting produces the same expert outputs (tests/test_models.py).
+EXCHANGE_DISPATCH = False
 
 
 def init_moe(key, cfg):
@@ -135,16 +146,37 @@ def apply_moe(p, x, cfg):
     # computed on the fp32 resident accumulator, exactly like the dense
     # MLP epilogue (same epilogue.ACTIVATIONS definitions, so one network
     # never mixes two gelu formulations between expert and dense paths).
-    h1 = facility.contract(
-        "ecd,edf->ecf", xe, p["w1"],
-        plan=Plan(epilogue=Epilogue(activation=cfg.act)))
-    h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
-    if cfg.gated_mlp:
-        h = h1 * facility.contract("ecd,edf->ecf", xe, p["w3"])
+    if EXCHANGE_DISPATCH:
+        # Explicit all-to-all: fn runs inside the exchange's shard_map
+        # trace, so its contracts pin mesh=False (the slab is already a
+        # shard) and it uses no shard() annotations.
+        def expert_ffn(slab, ps):
+            h1 = facility.contract(
+                "ecd,edf->ecf", slab, ps["w1"],
+                plan=Plan(mesh=False,
+                          epilogue=Epilogue(activation=cfg.act)))
+            if cfg.gated_mlp:
+                h1 = h1 * facility.contract("ecd,edf->ecf", slab, ps["w3"],
+                                            plan=Plan(mesh=False))
+            return facility.contract("ecf,efd->ecd", h1, ps["w2"],
+                                     plan=Plan(mesh=False))
+
+        weights = {k_: p[k_] for k_ in
+                   (("w1", "w3", "w2") if cfg.gated_mlp
+                    else ("w1", "w2"))}
+        ye = par.expert_exchange(xe, weights, expert_ffn)
     else:
-        h = h1
-    ye = facility.contract("ecf,efd->ecd", h, p["w2"])
-    ye = shard(ye, "experts", None, None).reshape(e * cap, d)
+        h1 = facility.contract(
+            "ecd,edf->ecf", xe, p["w1"],
+            plan=Plan(epilogue=Epilogue(activation=cfg.act)))
+        h1 = shard(h1, "experts", None, "mlp")   # EP, or TP-inside-expert
+        if cfg.gated_mlp:
+            h = h1 * facility.contract("ecd,edf->ecf", xe, p["w3"])
+        else:
+            h = h1
+        ye = facility.contract("ecf,efd->ecd", h, p["w2"])
+        ye = shard(ye, "experts", None, None)
+    ye = ye.reshape(e * cap, d)
 
     # ---- combine ----
     if GATHER_DISPATCH:

@@ -22,6 +22,8 @@ import dataclasses
 from typing import Optional
 
 import jax
+from jax import lax
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -34,12 +36,28 @@ class ShardingRules:
     fsdp_axes: tuple = ()
     enabled: bool = False
 
+    # Identity hash (the rules dict is unhashable) so a ShardingRules may
+    # ride jit-hashable carriers like lowering.Plan.mesh: equality stays
+    # field-wise, so distinct-but-equal bindings cost at most a cache
+    # miss, never a wrong lookup.
+    __hash__ = object.__hash__
+
     def to_spec(self, logical_axes) -> P:
         out = []
         for name in logical_axes:
             ax = self.rules.get(name) if name else None
             out.append(ax)
         return P(*out)
+
+    def axis_extent(self, ax) -> int:
+        """Total device count behind a rules entry (1 for None)."""
+        if ax is None or self.mesh is None:
+            return 1
+        flat = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in flat:
+            size *= self.mesh.shape[a]
+        return size
 
 
 _RULES = contextvars.ContextVar("sharding_rules", default=ShardingRules())
@@ -166,3 +184,56 @@ def tree_param_specs(abstract_params, axes_tree, rules: ShardingRules,
         abstract_params, axes_tree,
         is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(e, (str, type(None))) for e in x))
+
+
+# ----------------------------------------------------------------------
+# Sanctioned collectives: the only raw shard_map / lax.all_to_all surface
+# above core/lowering (analysis rule ``collective-purity``).  Layers that
+# need an explicit exchange (models/moe.py's expert dispatch) call these
+# helpers instead of reaching for the collective primitives themselves.
+# ----------------------------------------------------------------------
+
+def expert_exchange(buf, params, fn):
+    """All-to-all expert dispatch: exchange a slot-sharded ``(E, C, ...)``
+    dispatch buffer against the expert axis, run ``fn`` on each shard's
+    expert slab, and exchange the result back.
+
+    ``buf`` is the capacity-dispatch buffer (experts x capacity-slots x
+    features) with its *slot* dim sharded over the expert-parallel mesh
+    axis (tokens live where they were routed from); ``params`` is a
+    pytree of per-expert tensors with experts leading (sharded over the
+    same axis).  Inside the exchange each shard holds ``(E/P, C, ...)`` —
+    every peer's slots for *its* experts — so ``fn(slab, params)`` runs
+    the per-shard batched expert GEMMs on resident weights.  The return
+    value is exchanged back to slot sharding and reassembled, so the
+    global result is exactly the unsharded ``fn(buf, params)``: the
+    all_to_all is a pure permutation of slots.
+
+    Degrades to a plain ``fn(buf, params)`` call when no expert-parallel
+    axis is active or E/C do not divide it — the caller never branches.
+    ``fn`` runs inside a shard_map trace: contracts it issues must bind
+    ``Plan(mesh=False)`` and it must not call :func:`shard`.
+    """
+    r = current()
+    ax = r.rules.get("experts") if r.enabled and r.mesh is not None \
+        else None
+    p = r.axis_extent(ax)
+    e, c = buf.shape[0], buf.shape[1]
+    if p <= 1 or e % p or c % p:
+        return fn(buf, params)
+    from repro.runtime import faults as _faults
+    _faults.maybe_inject(_faults.COLLECTIVE)
+    flat = ax if isinstance(ax, tuple) else (ax,)
+    name = flat if len(flat) > 1 else flat[0]
+
+    def body(b, ps):
+        b = lax.all_to_all(b, name, split_axis=0, concat_axis=1,
+                           tiled=True)
+        out = fn(b, ps)
+        return lax.all_to_all(out, name, split_axis=1, concat_axis=0,
+                              tiled=True)
+
+    return shard_map(
+        body, mesh=r.mesh,
+        in_specs=(P(None, ax), P(ax)), out_specs=P(None, ax),
+        check_rep=False)(buf, params)

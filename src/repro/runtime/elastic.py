@@ -72,7 +72,12 @@ class ElasticTrainer:
                  checkpointer: Checkpointer,
                  cfg: ElasticConfig | None = None,
                  state_shardings: Any = None,
-                 faults: _faults.FaultPlan | None = None):
+                 faults: _faults.FaultPlan | None = None,
+                 on_step: Callable | None = None):
+        # on_step(step, loss, dt_s): host-side live-progress hook, fired
+        # after each step's loss is materialized (drivers print from it;
+        # it must not mutate training state).
+        self.on_step = on_step
         self.make_step = make_step
         self.make_state = make_state
         self.batches = batches
@@ -161,6 +166,8 @@ class ElasticTrainer:
                     metrics_log.append(
                         {"step": step,
                          "loss": float(metrics["loss"])})
+                    if self.on_step is not None:
+                        self.on_step(step, metrics_log[-1]["loss"], dt)
                     if (step + 1) % self.cfg.ckpt_every == 0:
                         self.ckpt.save_async(step + 1, state)
                 self.ckpt.wait()

@@ -72,9 +72,14 @@ AUTOTUNE_LOAD = "autotune.load"
 AUTOTUNE_SAVE = "autotune.save"
 CHECKPOINT_SAVE = "checkpoint.save"
 TRAIN_STEP = "train.step"
+# The comm edges of the mesh-native lowering path: every shard_map launch
+# of a sharded contract (core/lowering), the MoE expert all_to_all
+# exchange (parallel/api), and the pipeline's ppermute ring ticks
+# (runtime/pipeline) consult this point before entering the collective.
+COLLECTIVE = "collective"
 
 POINTS = (CONTRACT_DISPATCH, KV_ALLOC, SERVE_STEP, AUTOTUNE_LOAD,
-          AUTOTUNE_SAVE, CHECKPOINT_SAVE, TRAIN_STEP)
+          AUTOTUNE_SAVE, CHECKPOINT_SAVE, TRAIN_STEP, COLLECTIVE)
 
 # ---- fault kinds ------------------------------------------------------
 

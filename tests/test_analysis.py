@@ -228,6 +228,43 @@ def test_fault_point_literal():
     """)
 
 
+def test_collective_purity():
+    # raw collectives outside the mesh-native dispatch surface: every
+    # spelling (module attr chain, lax alias, from-import) is a finding
+    assert "collective-purity" in rule_ids("""
+        from jax.experimental.shard_map import shard_map
+        def f(fn, mesh, x):
+            return shard_map(fn, mesh=mesh)(x)
+    """)
+    assert "collective-purity" in rule_ids("""
+        from jax import lax
+        def ring(x, pairs):
+            return lax.ppermute(x, 'stage', pairs)
+    """)
+    assert "collective-purity" in rule_ids("""
+        import jax
+        def exchange(x):
+            x = jax.lax.all_to_all(x, 'experts', 0, 1, tiled=True)
+            return jax.lax.with_sharding_constraint(x, None)
+    """)
+    # the three sanctioned modules own the primitives
+    for path in ("src/repro/parallel/api.py",
+                 "src/repro/core/lowering.py",
+                 "src/repro/runtime/pipeline.py"):
+        assert "collective-purity" not in rule_ids("""
+            from jax.experimental.shard_map import shard_map
+            from jax import lax
+            def f(fn, mesh, x):
+                return shard_map(fn, mesh=mesh)(lax.ppermute(x, 'a', []))
+        """, path)
+    # parallel.api.shard (the sanctioned annotation) is not a collective
+    assert "collective-purity" not in rule_ids("""
+        from repro.parallel.api import shard
+        def f(x):
+            return shard(x, "batch", None)
+    """)
+
+
 def test_suppression_honored():
     flagged = """
         def f(x, y):
@@ -256,7 +293,8 @@ def test_every_ast_rule_has_catalog_entry():
     ast_rules = {"facility-purity", "lax-purity", "grid-owns-batch",
                  "attn-op-class", "pack-once", "layer-stratification",
                  "deprecated-shim", "mutable-default-arg",
-                 "overbroad-except", "fault-point-literal"}
+                 "overbroad-except", "fault-point-literal",
+                 "collective-purity"}
     for rid in ast_rules:
         assert rid in rules.RULES, rid
         assert rules.RULES[rid].contract_pr.startswith("PR")
